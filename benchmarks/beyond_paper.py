@@ -1,0 +1,40 @@
+"""Beyond-paper scheduler study: independent-AG greedy, 1-step lookahead,
+water-filling unequal chunks — vs Themis greedy, at low chunk counts where
+the greedy's quantization hurts most (Fig. 10 regime)."""
+import statistics
+
+from benchmarks.common import row, timed
+from repro.core.simulator import simulate_scheduled
+from repro.topology import make_table2_topologies
+
+CPCS = [4, 8, 16, 64]
+
+
+def run():
+    rows = []
+    topos = make_table2_topologies()
+    agg = {}
+    for name in ("3D-SW_SW_SW_hetero", "4D-Ring_FC_Ring_SW",
+                 "3D-SW_SW_SW_homo"):
+        topo = topos[name]
+        for cpc in CPCS:
+            res = {}
+            us_tot = 0.0
+            for policy, wf in (("themis", False), ("themis_indep_ag", False),
+                               ("lookahead", False), ("themis_guarded", False),
+                               ("themis", True)):
+                key = "waterfill" if wf else policy
+                (r, _), us = timed(
+                    simulate_scheduled, topo, "AR", 100e6, policy=policy,
+                    chunks_per_collective=cpc, intra="SCF", water_filling=wf)
+                res[key] = r.avg_bw_utilization(topo)
+                us_tot += us
+                agg.setdefault(key, []).append(res[key])
+            rows.append(row(
+                f"beyond/{name}/cpc{cpc}", us_tot / 5,
+                " ".join(f"{k}={v*100:.1f}%" for k, v in res.items())))
+    rows.append(row(
+        "beyond/SUMMARY", 0.0,
+        " ".join(f"{k}_avg={statistics.mean(v)*100:.1f}%"
+                 for k, v in agg.items())))
+    return rows

@@ -1,0 +1,22 @@
+"""Shared benchmark utilities: timing + CSV rows."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return out, us
+
+
+def row(name: str, us: float, derived) -> tuple[str, float, str]:
+    return (name, us, derived)
+
+
+def print_rows(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

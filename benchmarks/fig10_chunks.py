@@ -1,0 +1,28 @@
+"""Paper Fig. 10: BW utilization vs chunks-per-collective (4..512),
+100MB AR on 3D-SW_SW_SW_hetero and 4D-Ring_FC_Ring_SW."""
+from benchmarks.common import row, timed
+from repro.core.simulator import simulate_scheduled
+from repro.topology import make_table2_topologies
+
+CPCS = [4, 8, 16, 32, 64, 128, 256, 512]
+
+
+def run():
+    rows = []
+    topos = make_table2_topologies()
+    for name in ("3D-SW_SW_SW_hetero", "4D-Ring_FC_Ring_SW"):
+        topo = topos[name]
+        for policy, intra in (("baseline", "FIFO"), ("themis", "FIFO"),
+                              ("themis", "SCF")):
+            utils = []
+            us_tot = 0.0
+            for cpc in CPCS:
+                (res, _), us = timed(
+                    simulate_scheduled, topo, "AR", 100e6, policy=policy,
+                    chunks_per_collective=cpc, intra=intra)
+                utils.append(res.avg_bw_utilization(topo))
+                us_tot += us
+            vals = " ".join(f"{c}:{u*100:.1f}%" for c, u in zip(CPCS, utils))
+            rows.append(row(f"fig10/{name}/{policy}+{intra}",
+                            us_tot / len(CPCS), vals))
+    return rows

@@ -1,0 +1,33 @@
+"""Paper Fig. 11: average BW utilization vs AR size (all topologies)."""
+import statistics
+
+from benchmarks.common import row, timed
+from repro.core.simulator import simulate_scheduled
+from repro.topology import make_table2_topologies
+
+MB = 1e6
+SIZES = [100, 250, 500, 750, 1000]
+
+
+def run():
+    rows = []
+    per_policy = {}
+    for policy, intra in (("baseline", "FIFO"), ("themis", "FIFO"),
+                          ("themis", "SCF")):
+        utils = []
+        us_tot = 0.0
+        for name, topo in make_table2_topologies().items():
+            for s in SIZES:
+                (res, _), us = timed(simulate_scheduled, topo, "AR", s * MB,
+                                     policy=policy, intra=intra)
+                utils.append(res.avg_bw_utilization(topo))
+                us_tot += us
+        per_policy[f"{policy}+{intra}"] = statistics.mean(utils)
+        rows.append(row(f"fig11/{policy}+{intra}", us_tot / len(utils),
+                        f"avg_util={statistics.mean(utils)*100:.2f}%"))
+    rows.append(row(
+        "fig11/SUMMARY", 0.0,
+        f"baseline={per_policy['baseline+FIFO']*100:.1f}%(paper:56.31) "
+        f"themis_fifo={per_policy['themis+FIFO']*100:.1f}%(paper:87.67) "
+        f"themis_scf={per_policy['themis+SCF']*100:.1f}%(paper:95.14)"))
+    return rows

@@ -1,0 +1,50 @@
+"""Paper Fig. 12: end-to-end training-iteration time for ResNet-152, GNMT,
+DLRM, Transformer-1T: baseline vs Themis+SCF vs Ideal across topologies.
+
+Compute time per workload is calibrated so the *Ideal* speedup matches the
+paper's reported Ideal (1.54/1.32/1.33/1.26) — collective sizes follow the
+published model structures; Themis's speedup is then a genuine prediction
+validated against the paper's 1.49/1.30/1.30/1.25 (see EXPERIMENTS.md).
+"""
+import statistics
+
+from benchmarks.common import row, timed
+from repro.core.workloads import ALL_WORKLOADS, calibrate_compute, iteration_time
+from repro.topology import make_table2_topologies
+
+PAPER = {
+    "resnet152": (1.49, 2.25, 1.54),
+    "gnmt": (1.30, 1.78, 1.32),
+    "dlrm": (1.30, 1.77, 1.33),
+    "transformer_1t": (1.25, 1.53, 1.26),
+}
+
+
+def run():
+    rows = []
+    topos = list(make_table2_topologies().values())
+    for wname, maker in ALL_WORKLOADS.items():
+        w = maker()
+        pa, pm, pi = PAPER[wname]
+        calibrate_compute(w, topos, pi)
+        sp, spi = [], []
+        us_tot = 0.0
+        for topo in topos:
+            (b, us) = timed(iteration_time, w, topo, "baseline", intra="FIFO")
+            t = iteration_time(w, topo, "themis", intra="SCF")
+            i = iteration_time(w, topo, "ideal")
+            sp.append(b.total_s / t.total_s)
+            spi.append(b.total_s / i.total_s)
+            us_tot += us
+            rows.append(row(
+                f"fig12/{wname}/{topo.name}", us,
+                f"base={b.total_s*1e3:.2f}ms themis={t.total_s*1e3:.2f}ms "
+                f"ideal={i.total_s*1e3:.2f}ms "
+                f"exposed_comm: {100*(b.total_s-b.compute_s)/b.total_s:.0f}%->"
+                f"{100*(t.total_s-t.compute_s)/t.total_s:.0f}%"))
+        rows.append(row(
+            f"fig12/{wname}/SUMMARY", us_tot / len(topos),
+            f"themis_avg={statistics.mean(sp):.2f}x(paper:{pa}) "
+            f"themis_max={max(sp):.2f}x(paper:{pm}) "
+            f"ideal_avg={statistics.mean(spi):.2f}x(paper:{pi})"))
+    return rows

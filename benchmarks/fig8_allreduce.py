@@ -1,0 +1,33 @@
+"""Paper Fig. 8: total AR communication time, baseline vs Themis+FIFO vs
+Themis+SCF, sizes 100MB-1GB across the six Table-2 topologies."""
+from benchmarks.common import row, timed
+from repro.core.simulator import simulate_scheduled
+from repro.topology import make_table2_topologies
+
+MB = 1e6
+SIZES = [100, 250, 500, 750, 1000]
+
+
+def run():
+    rows = []
+    speed_f, speed_s = [], []
+    for name, topo in make_table2_topologies().items():
+        for s in SIZES:
+            (rb, _), us = timed(simulate_scheduled, topo, "AR", s * MB,
+                                policy="baseline", intra="FIFO")
+            rf, _ = simulate_scheduled(topo, "AR", s * MB, policy="themis",
+                                       intra="FIFO")
+            rs, _ = simulate_scheduled(topo, "AR", s * MB, policy="themis",
+                                       intra="SCF")
+            speed_f.append(rb.makespan / rf.makespan)
+            speed_s.append(rb.makespan / rs.makespan)
+            rows.append(row(
+                f"fig8/{name}/{s}MB", us,
+                f"base={rb.makespan*1e3:.2f}ms themis_fifo={rf.makespan*1e3:.2f}ms "
+                f"themis_scf={rs.makespan*1e3:.2f}ms speedup={rb.makespan/rs.makespan:.2f}x"))
+    n = len(speed_s)
+    rows.append(row("fig8/SUMMARY", 0.0,
+                    f"avg_speedup_fifo={sum(speed_f)/n:.2f}x(paper:1.58) "
+                    f"avg_speedup_scf={sum(speed_s)/n:.2f}x(paper:1.72) "
+                    f"max_scf={max(speed_s):.2f}x(paper:2.70)"))
+    return rows

@@ -1,0 +1,18 @@
+"""Paper Fig. 9: per-dimension activity rates, 1GB AR on 3D-SW_SW_SW_homo."""
+from benchmarks.common import row, timed
+from repro.core.simulator import simulate_scheduled
+from repro.topology import make_table2_topologies
+
+
+def run():
+    topo = make_table2_topologies()["3D-SW_SW_SW_homo"]
+    rows = []
+    for policy, intra in (("baseline", "FIFO"), ("themis", "FIFO"),
+                          ("themis", "SCF")):
+        (res, _), us = timed(simulate_scheduled, topo, "AR", 1e9,
+                             policy=policy, intra=intra)
+        rates = " ".join(
+            f"dim{k+1}={res.activity_rate(k)*100:.1f}%"
+            for k in range(topo.num_dims))
+        rows.append(row(f"fig9/{policy}+{intra}", us, rates))
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Sec. 6.3: BW-provisioning scenarios per topology + util bounds."""
+from benchmarks.common import row, timed
+from repro.core.insights import (
+    analyze,
+    baseline_utilization_bound,
+    themis_utilization_bound,
+)
+from repro.topology import make_current_topology, make_table2_topologies
+
+
+def run():
+    rows = []
+    topos = dict(make_table2_topologies())
+    topos["current-2D"] = make_current_topology()
+    for name, topo in topos.items():
+        (verdicts, us) = timed(analyze, topo)
+        worst = max(verdicts, key=lambda v: abs(v.ratio - 1.0))
+        bb = baseline_utilization_bound(topo)
+        tb = themis_utilization_bound(topo)
+        rows.append(row(
+            f"insights/{name}", us,
+            f"baseline_bound={bb*100:.1f}% themis_bound={tb*100:.1f}% "
+            f"worst_pair=dim{worst.dim_k+1}/dim{worst.dim_l+1}:"
+            f"{worst.verdict}(ratio={worst.ratio:.3f})"))
+    return rows

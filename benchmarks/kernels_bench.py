@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs XLA path vs oracle wall
+time at small shapes (CPU container — correctness/structure, not TPU perf),
+plus the analytic VMEM working set per BlockSpec tile."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+
+
+def _vmem_bytes_flash(bq, bk, d):
+    # q tile + k/v tiles + scores + scratch (m, l, acc) in fp32
+    return 4 * (bq * d + 2 * bk * d + bq * bk + 2 * bq + bq * d)
+
+
+def run():
+    from repro.kernels import ref
+    from repro.models.common import flash_attention_xla
+
+    rng = np.random.default_rng(0)
+    rows = []
+    b, s, h, kv, d = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+
+    f_xla = jax.jit(lambda q, k, v: flash_attention_xla(
+        q, k, v, causal=True, block_q=128, block_k=128))
+    f_xla(q, k, v).block_until_ready()
+    _, us = timed(lambda: f_xla(q, k, v).block_until_ready(), repeat=5)
+    rows.append(row("kernels/flash_xla_fwd_256", us,
+                    f"vmem_tile={_vmem_bytes_flash(128, 128, d)/1024:.0f}KiB "
+                    "(target: fits 16MiB VMEM)"))
+
+    f_ref = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    f_ref(q, k, v).block_until_ready()
+    _, us = timed(lambda: f_ref(q, k, v).block_until_ready(), repeat=5)
+    rows.append(row("kernels/naive_ref_fwd_256", us, "O(S^2) oracle"))
+
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (2, 512, 256)), jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((2, 512, 256)), jnp.float32)
+    g_ref = jax.jit(lambda a, bb: ref.rglru_scan_ref(a, bb))
+    g_ref(a, bb).block_until_ready()
+    _, us = timed(lambda: g_ref(a, bb).block_until_ready(), repeat=5)
+    rows.append(row("kernels/rglru_ref_512x256", us, "lax.scan oracle"))
+
+    x = jnp.asarray(rng.standard_normal((1024, 512)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((512,)), jnp.float32)
+    r_ref = jax.jit(lambda x, w: ref.rmsnorm_ref(x, w))
+    r_ref(x, w).block_until_ready()
+    _, us = timed(lambda: r_ref(x, w).block_until_ready(), repeat=10)
+    rows.append(row("kernels/rmsnorm_ref_1024x512", us, "fused oracle"))
+    return rows

@@ -1,0 +1,30 @@
+"""Roofline table: read the dry-run artifacts and emit per-cell terms."""
+import glob
+import json
+import os
+
+
+def run():
+    rows = []
+    files = sorted(glob.glob(os.path.join("runs", "dryrun", "*_gspmd.json")))
+    for f in files:
+        d = json.load(open(f))
+        if d.get("status") == "skipped":
+            rows.append((f"roofline/{d['arch']}/{d['shape']}", 0.0,
+                         "SKIP " + d["reason"]))
+            continue
+        if d.get("status") != "ok":
+            rows.append((f"roofline/{d['arch']}/{d['shape']}", 0.0, "FAIL"))
+            continue
+        if "pod=2" in d["mesh"]:
+            continue  # roofline table is single-pod (multi-pod proves scale)
+        r = d["roofline"]
+        rows.append((
+            f"roofline/{d['arch']}/{d['shape']}",
+            d.get("compile_s", 0) * 1e6,
+            f"compute={r['compute_s']*1e3:.3f}ms memory={r['memory_s']*1e3:.3f}ms "
+            f"collective={r['collective_s']*1e3:.3f}ms dominant={r['dominant']} "
+            f"frac={r['roofline_fraction']:.3f} "
+            f"useful={r['useful_ratio']:.3f} "
+            f"mem/dev={d['memory']['per_device_total_gib']}GiB"))
+    return rows

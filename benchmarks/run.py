@@ -1,0 +1,44 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``us_per_call`` is the wall time
+of the underlying simulator/compile call; ``derived`` carries the metric the
+paper reports (speedups, utilizations, roofline terms).
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        beyond_paper,
+        kernels_bench,
+        fig8_allreduce,
+        fig9_activity,
+        fig10_chunks,
+        fig11_utilization,
+        fig12_workloads,
+        insights_study,
+        roofline_table,
+    )
+    from benchmarks.common import print_rows
+
+    mods = [
+        ("fig8", fig8_allreduce),
+        ("fig9", fig9_activity),
+        ("fig10", fig10_chunks),
+        ("fig11", fig11_utilization),
+        ("fig12", fig12_workloads),
+        ("insights", insights_study),
+        ("beyond", beyond_paper),
+        ("roofline", roofline_table),
+        ("kernels", kernels_bench),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods:
+        if only and name != only:
+            continue
+        print_rows(mod.run())
+
+
+if __name__ == "__main__":
+    main()

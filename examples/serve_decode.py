@@ -1,0 +1,42 @@
+"""Serving example: sharded prefill + batched autoregressive decode with a
+KV cache (optionally int8-quantized), on 8 virtual devices.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ParallelConfig, ShapeConfig, get_arch  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.train.serve import make_serve_fns  # noqa: E402
+
+mesh = make_mesh((2, 4), ("data", "model"))
+for kv_quant in (False, True):
+    cfg = get_arch("llama3-8b", reduced=True).replace(kv_quant=kv_quant)
+    api = build_model(cfg)
+    shape = ShapeConfig("serve", 64, 4, "decode")
+    jit_prefill, jit_decode, _ = make_serve_fns(
+        api, mesh, ParallelConfig(data=2, model=4), shape)
+    params = api.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)), jnp.int32)
+    logits, caches = jit_prefill(params, {"tokens": prompt})
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    toks = [tok]
+    t0 = time.time()
+    for i in range(16):
+        logits, caches = jit_decode(params, caches, tok,
+                                    jnp.asarray(32 + i, jnp.int32))
+        tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+        toks.append(tok)
+    dt = time.time() - t0
+    print(f"kv_quant={kv_quant}: decoded 16 tokens x batch 4 in {dt:.2f}s; "
+          f"sample ids {[int(t[0]) for t in toks[:8]]}")

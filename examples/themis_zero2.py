@@ -1,0 +1,48 @@
+"""End-to-end Themis demo: ZeRO-2 data-parallel training where the gradient
+reduce-scatter / parameter all-gather is chunked and scheduled by Themis
+across a 3-axis device mesh — the paper's technique driving a real train
+step.  Runs on CPU with 8 virtual devices.
+
+    PYTHONPATH=src python examples/themis_zero2.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ParallelConfig, TrainConfig, get_arch  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.train.step import make_themis_train_step  # noqa: E402
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+cfg = get_arch("qwen2.5-3b", reduced=True)
+api = build_model(cfg)
+
+for policy in ("hier_baseline", "themis"):
+    parallel = ParallelConfig(data=2, model=2, pods=2, dp_sync=policy,
+                              chunks_per_collective=8)
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=2, total_steps=30)
+    step, init_state, orders = make_themis_train_step(api, mesh, parallel, tcfg)
+    params, opt = init_state()
+    print(f"\n=== dp_sync={policy} ===")
+    uniq = {}
+    for o in orders:
+        uniq[o] = uniq.get(o, 0) + 1
+    for o, n in uniq.items():
+        print(f"  {n:2d} chunks take RS order {'->'.join(o)}")
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (8, 64)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (8, 64)), jnp.int32),
+    }
+    losses = []
+    for i in range(20):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    print(f"  loss {losses[0]:.4f} -> {losses[-1]:.4f} over 20 steps "
+          "(overfitting one batch)")

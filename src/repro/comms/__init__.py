@@ -1,0 +1,13 @@
+from repro.comms.hierarchical import (  # noqa: F401
+    chunked_all_gather,
+    chunked_all_reduce,
+    chunked_reduce_scatter,
+    chunked_reduce_scatter_int8,
+    int8_reduce_scatter_axis,
+)
+from repro.comms.schedule_bridge import (  # noqa: F401
+    collective_stats,
+    predicted_axis_loads,
+    themis_axis_orders,
+    topology_from_axes,
+)

@@ -1,0 +1,27 @@
+"""Architecture registry — importing this package registers all configs."""
+from repro.configs import (  # noqa: F401
+    deepseek_moe_16b,
+    granite_34b,
+    internvl2_26b,
+    llama3_8b,
+    qwen2_5_14b,
+    qwen2_5_3b,
+    qwen3_moe_235b_a22b,
+    recurrentgemma_2b,
+    whisper_medium,
+    xlstm_1_3b,
+)
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    ModelConfig,
+    ParallelConfig,
+    ShapeConfig,
+    TrainConfig,
+    applicable_shapes,
+    get_arch,
+    list_archs,
+)

@@ -1,0 +1,176 @@
+"""Config system: model architecture, input shapes, parallelism.
+
+Every assigned architecture provides a ``ModelConfig`` (exact published
+dims) plus a ``reduced()`` variant for CPU smoke tests.  Input shapes are
+the four assigned cells (train_4k / prefill_32k / decode_32k / long_500k)
+with per-arch applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Literal
+
+Family = Literal["dense", "moe", "vlm", "audio", "hybrid", "ssm"]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    gated_mlp: bool = True             # SwiGLU; False -> plain GELU MLP
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+
+    # hybrid (recurrentgemma): repeating block pattern + tail
+    block_pattern: tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    d_rnn: int = 0
+    conv_width: int = 4
+    local_window: int = 0                 # sliding-window size for local attn
+
+    # ssm (xlstm)
+    slstm_every: int = 0                  # 1 sLSTM per this many blocks
+    proj_factor: float = 2.0              # mLSTM up-projection factor
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    num_frames: int = 1500                # stub frontend: precomputed frames
+
+    # vlm
+    num_patches: int = 0                  # stub frontend: precomputed patches
+
+    # numerics / runtime
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    kv_quant: bool = False                # int8 KV cache (+bf16 scales)
+    remat: bool = True
+    remat_policy: str = "full"            # "full" (save nothing) | "dots"
+    attention_impl: str = "reference"     # "reference" | "pallas"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode state is O(1)/O(window) in context length."""
+        return self.family in ("hybrid", "ssm")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[ShapeConfig]:
+    """The assigned shape cells this architecture actually runs.
+
+    ``long_500k`` requires sub-quadratic attention (DESIGN.md
+    §Arch-applicability); it is skipped for pure full-attention archs.
+    """
+    shapes = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.sub_quadratic:
+        shapes.append(LONG_500K)
+    return shapes
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """Mesh axes and policy switches for the distributed runtime."""
+
+    data: int = 1
+    model: int = 1
+    pods: int = 1
+    fsdp: bool = False                 # shard params over data axis too
+    seq_sharding: bool = False         # sequence parallelism between blocks
+    zero: int = 1                      # ZeRO stage for optimizer states (0-2)
+    dp_sync: str = "gspmd"             # "gspmd" | "hier_baseline" | "themis"
+    chunks_per_collective: int = 16    # Themis chunking of the grad buffer
+    compression: str = "none"          # "none" | "int8"
+    remat_policy: str = "dots"         # "none" | "dots" | "full"
+
+    @property
+    def mesh_shape(self) -> tuple[int, ...]:
+        return (self.pods, self.data, self.model) if self.pods > 1 else (self.data, self.model)
+
+    @property
+    def mesh_axes(self) -> tuple[str, ...]:
+        return ("pod", "data", "model") if self.pods > 1 else ("data", "model")
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    seed: int = 0
+    microbatch: int = 0                # 0 = no gradient accumulation
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "checkpoints"
+    keep_checkpoints: int = 3
+
+
+# -- registry ---------------------------------------------------------------
+_REGISTRY: dict[str, "ArchSpec"] = {}
+
+
+@dataclass(frozen=True)
+class ArchSpec:
+    config: ModelConfig
+    reduced: ModelConfig
+
+
+def register(config: ModelConfig, reduced: ModelConfig) -> ArchSpec:
+    spec = ArchSpec(config, reduced)
+    _REGISTRY[config.name] = spec
+    return spec
+
+
+def get_arch(name: str, *, reduced: bool = False) -> ModelConfig:
+    import repro.configs  # noqa: F401  (trigger registration)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    spec = _REGISTRY[name]
+    return spec.reduced if reduced else spec.config
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)

@@ -1,0 +1,30 @@
+"""qwen2.5-3b [hf:Qwen/Qwen2.5 family].
+
+36L d_model=2048 16H (GQA kv=2) d_ff=11008 vocab=151936, QKV bias.
+
+Flagship Themis demo arch: small enough to train pure-DP with ZeRO-2, so the
+gradient reduce-scatter / param all-gather spans three mesh axes
+(pod x data x model) — a 3-dim hierarchical collective.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    d_ff=11008,
+    vocab_size=151936,
+    rope_theta=1e6,
+    qkv_bias=True,
+    tie_embeddings=True,
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256,
+)
+
+register(CONFIG, REDUCED)

@@ -1,0 +1,36 @@
+"""Themis core — the paper's contribution.
+
+Scheduling (Algorithm 1), latency model (Sec. 4.4), chunking, consistency
+(Sec. 4.6), the multi-rail simulator used for evaluation, the Fig. 12
+workload models and the Sec. 6.3 provisioning analysis.
+"""
+from repro.core.chunking import Chunk, coalesce_by_order, split_equal
+from repro.core.consistency import fix_intra_dim_order, verify_consistent_execution
+from repro.core.latency_model import LatencyModel, StageOp, stage_transition
+from repro.core.load_tracker import DimLoadTracker
+from repro.core.scheduler import (
+    POLICIES,
+    ThemisScheduler,
+    baseline_order,
+    schedule_collective,
+)
+from repro.core.simulator import SimResult, simulate, simulate_scheduled
+
+__all__ = [
+    "Chunk",
+    "DimLoadTracker",
+    "LatencyModel",
+    "POLICIES",
+    "SimResult",
+    "StageOp",
+    "ThemisScheduler",
+    "baseline_order",
+    "coalesce_by_order",
+    "fix_intra_dim_order",
+    "schedule_collective",
+    "simulate",
+    "simulate_scheduled",
+    "split_equal",
+    "stage_transition",
+    "verify_consistent_execution",
+]

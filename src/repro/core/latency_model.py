@@ -1,0 +1,108 @@
+"""Themis Latency Model (paper Sec. 4.4).
+
+Total latency of network dimension K:
+
+    Latency(dimK) = A_K + N_K * B_K + idle_K
+
+- ``A_K``   fixed delay = number_of_steps * step_latency (collective-algorithm
+            and system dependent; obtained offline).
+- ``B_K``   per-byte latency = 1 / aggregate-BW of dimK.
+- ``N_K``   total bytes each NPU sends on dimK = sum of per-chunk ``n_K^i``.
+- ``idle_K`` minimized by SCF intra-dim scheduling (Sec. 4.3), not predicted.
+
+The Latency Model predicts ``n_K^i * B_K`` as the load of chunk #i on dimK
+(paper: "Since N_K only participates with B_K, the Latency Model only
+considers n_K^i x B_K as the latency of chunk #i on dimK").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.topology import Phase, Topology
+
+# A stage of a chunk's schedule: which phase runs on which dimension index.
+StageOp = tuple[Phase, int]
+
+
+def stage_transition(phase: Phase, npus: int, size_before: float) -> tuple[float, float]:
+    """(wire_bytes_per_npu, size_after) for one RS/AG stage.
+
+    ``size_before`` is the chunk's per-NPU resident bytes before the stage.
+    RS shrinks the chunk P x; AG grows it P x.  Wire bytes are symmetric:
+    a dimension moves (P-1)/P of the *large-end* size either way, matching
+    the paper's Fig. 5 stage-latency accounting.
+    """
+    if npus <= 1:
+        return 0.0, size_before
+    if phase == Phase.RS:
+        return (npus - 1) / npus * size_before, size_before / npus
+    # AG: (P-1) * size_before == (P-1)/P * size_after
+    return (npus - 1) * size_before, size_before * npus
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    """Predicts per-chunk, per-dimension communication latency."""
+
+    topology: Topology
+
+    # ---- fixed-delay term --------------------------------------------------
+    def fixed_delay(self, dim_idx: int, collective: str) -> float:
+        """A_K for running ``collective`` ('RS' | 'AG' | 'AR') on dimK."""
+        d = self.topology.dims[dim_idx]
+        if collective == "AR":
+            steps = d.algorithm.steps(d.npus, Phase.RS) + d.algorithm.steps(
+                d.npus, Phase.AG
+            )
+        else:
+            steps = d.algorithm.steps(d.npus, Phase(collective))
+        return steps * d.step_latency_s
+
+    def step_delay(self, dim_idx: int, phase: Phase) -> float:
+        """A-term of a single RS or AG stage on dimK."""
+        d = self.topology.dims[dim_idx]
+        return d.algorithm.steps(d.npus, phase) * d.step_latency_s
+
+    # ---- bandwidth term ----------------------------------------------------
+    def per_byte_latency(self, dim_idx: int) -> float:
+        return 1.0 / self.topology.dims[dim_idx].aggr_bw_bytes
+
+    def wire_time(self, dim_idx: int, wire_bytes: float) -> float:
+        return wire_bytes * self.per_byte_latency(dim_idx)
+
+    def stage_wire_bytes(
+        self, dim_idx: int, phase: Phase, size_before: float
+    ) -> tuple[float, float]:
+        return stage_transition(phase, self.topology.dims[dim_idx].npus, size_before)
+
+    # ---- per-chunk load prediction (Algorithm 1 lines 28-29) ---------------
+    def calc_loads(
+        self, chunk_bytes: float, schedule: Sequence[StageOp]
+    ) -> dict[int, float]:
+        """Predicted BW-term load each dim receives from one chunk.
+
+        ``schedule`` is the ordered list of (phase, dim) stages the chunk
+        traverses; sizes evolve stage to stage.  Returns {dim_idx: seconds}.
+        """
+        loads: dict[int, float] = {}
+        size = chunk_bytes
+        for phase, dim_idx in schedule:
+            wire, size = self.stage_wire_bytes(dim_idx, phase, size)
+            loads[dim_idx] = loads.get(dim_idx, 0.0) + self.wire_time(dim_idx, wire)
+        return loads
+
+    # ---- ideal bound (paper Table 3 'Ideal') --------------------------------
+    def ideal_time(self, collective: str, size_bytes: float) -> float:
+        """Communication latency at 100% BW utilization of every dimension."""
+        p = self.topology.total_npus
+        per_npu_bytes = (p - 1) / p * size_bytes
+        if collective == "AR":
+            per_npu_bytes *= 2.0  # RS + AG
+        return per_npu_bytes / self.topology.total_bw_bytes
+
+    def total_wire_bytes(self, collective: str, size_bytes: float) -> float:
+        """Schedule-invariant total bytes per NPU summed over all dims."""
+        p = self.topology.total_npus
+        b = (p - 1) / p * size_bytes
+        return 2.0 * b if collective == "AR" else b

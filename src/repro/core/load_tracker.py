@@ -1,0 +1,38 @@
+"""Dim Load Tracker (paper Fig. 6 / Algorithm 1).
+
+Maintains the accumulated predicted communication time ("load") each network
+dimension has been assigned by the chunks scheduled so far.  Reset at the
+start of every collective; initialized with each dimension's fixed delay
+``A_K`` for the requested collective type (Sec. 4.4).
+"""
+from __future__ import annotations
+
+from repro.core.latency_model import LatencyModel
+
+
+class DimLoadTracker:
+    def __init__(self, latency_model: LatencyModel):
+        self._lm = latency_model
+        self._loads: list[float] = [0.0] * latency_model.topology.num_dims
+
+    def reset(self, collective: str) -> None:
+        """Re-initialize loads to A_K of ``collective`` ('RS'|'AG'|'AR')."""
+        self._loads = [
+            self._lm.fixed_delay(k, collective)
+            for k in range(self._lm.topology.num_dims)
+        ]
+
+    def get_loads(self) -> list[float]:
+        return list(self._loads)
+
+    def update(self, new_load: dict[int, float]) -> None:
+        for dim_idx, secs in new_load.items():
+            self._loads[dim_idx] += secs
+
+    @property
+    def imbalance(self) -> float:
+        return max(self._loads) - min(self._loads)
+
+    @property
+    def min_load_dim(self) -> int:
+        return min(range(len(self._loads)), key=self._loads.__getitem__)

@@ -1,0 +1,207 @@
+"""Themis Scheduler — paper Algorithm 1, plus beyond-paper variants.
+
+Policies:
+  * ``baseline``      — static multi-rail hierarchical order (Sec. 2.3):
+                        RS dim1..dimD then AG dimD..dim1, same for all chunks.
+  * ``themis``        — Algorithm 1: greedy per-chunk order by sorted dim
+                        loads (ascending for RS, descending for AG), with the
+                        threshold guard reverting to baseline order; for AR
+                        the AG order is the reverse of the RS order (line 8).
+  * ``themis_indep_ag`` (beyond paper) — exploits the full (D! x D!) space of
+                        Observation 1: after committing a chunk's RS loads,
+                        the AG order is re-derived from the *updated* loads
+                        instead of being forced to reverse(RS).
+  * ``lookahead``     (beyond paper) — evaluates all D! RS orders for each
+                        chunk and commits the one minimizing the projected
+                        makespan (max dim load).  D <= 4 keeps this <= 24
+                        candidates per chunk.
+  * ``themis_guarded`` (beyond paper) — greedy, but a chunk's reordered
+                        schedule is committed only if its projected makespan
+                        beats the baseline order's.  Fixes the greedy's
+                        overshoot on *just-enough* provisioned networks
+                        (starting RS on a slow dim loads it with the full
+                        un-shrunk chunk) at 2 evaluations per chunk.
+
+All policies return the same artifact: a list of ``Chunk``s whose
+``schedule`` is the ordered list of (phase, dim) stage ops.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+from repro.core.chunking import Chunk, coalesce_by_order, split_equal
+from repro.core.latency_model import LatencyModel, StageOp
+from repro.core.load_tracker import DimLoadTracker
+from repro.topology import Phase, Topology
+
+POLICIES = ("baseline", "themis", "themis_indep_ag", "lookahead",
+            "themis_guarded")
+
+# Threshold = predicted runtime of an RS/AG of size chunk/16 on the dim with
+# the lowest current load (paper Sec. 5.3).
+THRESHOLD_DIVISOR = 16.0
+
+
+def baseline_order(num_dims: int, collective: str) -> list[StageOp]:
+    """Sec. 2.3 static schedule: RS dim1->dimD, AG dimD->dim1."""
+    rs = [(Phase.RS, k) for k in range(num_dims)]
+    ag = [(Phase.AG, k) for k in reversed(range(num_dims))]
+    if collective == "RS":
+        return rs
+    if collective == "AG":
+        return ag
+    return rs + ag
+
+
+def _sorted_dims(loads: Sequence[float], descending: bool) -> list[int]:
+    # Stable sort; ties resolve to lower dim index (deterministic across
+    # NPUs — required for Sec. 4.6.1 inter-dim schedule consistency).
+    return sorted(range(len(loads)), key=lambda k: (loads[k],), reverse=descending)
+
+
+@dataclass
+class ThemisScheduler:
+    """Implements SCHEDULE_COLLECTIVE / SCHEDULER.SCHEDULE of Algorithm 1."""
+
+    latency_model: LatencyModel
+    policy: str = "themis"
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}; want {POLICIES}")
+        self.tracker = DimLoadTracker(self.latency_model)
+
+    # -- public API -----------------------------------------------------------
+    def schedule_collective(
+        self,
+        collective: str,
+        collective_bytes: float,
+        chunks_per_collective: int,
+        *,
+        water_filling: bool = False,
+    ) -> list[Chunk]:
+        """Returns chunks with their stage schedules (Algorithm 1)."""
+        if collective not in ("AR", "RS", "AG"):
+            raise ValueError(f"unsupported collective {collective}")
+        if collective == "AG":
+            # Collective size convention (paper Sec. 2.3 / footnote 7): the
+            # size is the large end — the gathered result.  Chunks start at
+            # the pre-gather per-NPU resident size.
+            collective_bytes = collective_bytes / self.latency_model.topology.total_npus
+        self.tracker.reset(collective)
+        if water_filling and self.policy != "baseline":
+            micro = split_equal(collective_bytes, max(1024, 8 * chunks_per_collective))
+            for chunk in micro:
+                chunk.schedule = self._schedule_chunk(collective, chunk.size_bytes)
+            return coalesce_by_order(micro, chunks_per_collective)
+        chunks = split_equal(collective_bytes, chunks_per_collective)
+        for chunk in chunks:
+            chunk.schedule = self._schedule_chunk(collective, chunk.size_bytes)
+        return chunks
+
+    # -- Algorithm 1 SCHEDULER.SCHEDULE ---------------------------------------
+    def _schedule_chunk(self, collective: str, chunk_bytes: float) -> list[StageOp]:
+        d = self.latency_model.topology.num_dims
+        if self.policy == "baseline":
+            sched = baseline_order(d, collective)
+        elif self.policy == "lookahead":
+            sched = self._lookahead_order(collective, chunk_bytes)
+        elif self.policy == "themis_guarded":
+            sched = self._pick_by_projection(
+                collective, chunk_bytes,
+                [self._greedy_order(collective, chunk_bytes),
+                 baseline_order(d, collective)])
+        else:
+            sched = self._greedy_order(collective, chunk_bytes)
+        self.tracker.update(self.latency_model.calc_loads(chunk_bytes, sched))
+        return sched
+
+    def _below_threshold(self, loads: Sequence[float], chunk_bytes: float) -> bool:
+        min_dim = min(range(len(loads)), key=loads.__getitem__)
+        wire, _ = self.latency_model.stage_wire_bytes(
+            min_dim, Phase.RS, chunk_bytes / THRESHOLD_DIVISOR
+        )
+        threshold = self.latency_model.wire_time(min_dim, wire)
+        return max(loads) - min(loads) < threshold
+
+    def _greedy_order(self, collective: str, chunk_bytes: float) -> list[StageOp]:
+        d = self.latency_model.topology.num_dims
+        loads = self.tracker.get_loads()
+        if self._below_threshold(loads, chunk_bytes):
+            return baseline_order(d, collective)
+        if collective == "RS":
+            return [(Phase.RS, k) for k in _sorted_dims(loads, descending=False)]
+        if collective == "AG":
+            return [(Phase.AG, k) for k in _sorted_dims(loads, descending=True)]
+        # AR: RS order = ascending loads; AG = reverse(RS) (Alg. 1 line 8) —
+        # unless policy allows an independent AG pass (beyond paper).
+        rs_dims = _sorted_dims(loads, descending=False)
+        rs = [(Phase.RS, k) for k in rs_dims]
+        if self.policy == "themis_indep_ag":
+            interim = dict(enumerate(loads))
+            for dim, secs in self.latency_model.calc_loads(chunk_bytes, rs).items():
+                interim[dim] += secs
+            ag_loads = [interim[k] for k in range(d)]
+            ag = [(Phase.AG, k) for k in _sorted_dims(ag_loads, descending=True)]
+        else:
+            ag = [(Phase.AG, k) for k in reversed(rs_dims)]
+        return rs + ag
+
+    def _pick_by_projection(
+        self, collective: str, chunk_bytes: float,
+        candidates: list[list[StageOp]],
+    ) -> list[StageOp]:
+        loads = self.tracker.get_loads()
+        best = None
+        for cand in candidates:
+            proj = list(loads)
+            for dim, secs in self.latency_model.calc_loads(
+                    chunk_bytes, cand).items():
+                proj[dim] += secs
+            key = (max(proj), sum(proj))
+            if best is None or key < best[:2]:
+                best = (*key, cand)
+        return best[2]
+
+    def _lookahead_order(self, collective: str, chunk_bytes: float) -> list[StageOp]:
+        d = self.latency_model.topology.num_dims
+        loads = self.tracker.get_loads()
+        best: tuple[float, float, list[StageOp]] | None = None
+        for perm in itertools.permutations(range(d)):
+            if collective == "RS":
+                cand = [(Phase.RS, k) for k in perm]
+            elif collective == "AG":
+                cand = [(Phase.AG, k) for k in perm]
+            else:
+                cand = [(Phase.RS, k) for k in perm] + [
+                    (Phase.AG, k) for k in reversed(perm)
+                ]
+            proj = list(loads)
+            for dim, secs in self.latency_model.calc_loads(chunk_bytes, cand).items():
+                proj[dim] += secs
+            key = (max(proj), sum(proj))
+            if best is None or key < best[:2]:
+                best = (*key, cand)
+        assert best is not None
+        return best[2]
+
+
+def schedule_collective(
+    topology: Topology,
+    collective: str,
+    collective_bytes: float,
+    chunks_per_collective: int = 64,
+    policy: str = "themis",
+    *,
+    water_filling: bool = False,
+) -> list[Chunk]:
+    """Convenience wrapper: build model+scheduler and schedule one collective."""
+    sched = ThemisScheduler(LatencyModel(topology), policy)
+    return sched.schedule_collective(
+        collective,
+        collective_bytes,
+        chunks_per_collective,
+        water_filling=water_filling,
+    )

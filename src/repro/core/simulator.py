@@ -1,0 +1,279 @@
+"""Event-driven multi-rail collective simulator (ASTRA-lite).
+
+Models the 2xD-stage pipelined execution of chunked hierarchical collectives
+on a multi-dimensional network (paper Sec. 2.3/5.1):
+
+  * each network dimension is a serial bandwidth resource with a ready
+    queue (FIFO or Smallest-Chunk-First discipline, Sec. 4.3);
+  * a chunk's stage ops execute in schedule order (RS-before-AG is embedded
+    in the schedule); a stage occupies its dimension for ``wire_bytes/BW``
+    and *completes* (readying the chunk's next stage) after an additional
+    fixed delay ``A_stage`` — successive chunks pipeline through a
+    dimension's steps, so A is latency, not throughput (this matches
+    Algorithm 1, which charges A_K once per collective in the tracker
+    rather than per chunk);
+  * optional small-chunk fusion: if a chunk op cannot saturate a dimension's
+    BW (wire time < A), multiple ready ops are fused into one service
+    (Sec. 4.3's provision, mirroring NCCL collective fusion);
+  * optional enforced per-dim op order (Sec. 4.6.2 consistency) and random
+    service-time jitter for consistency experiments.
+
+Outputs makespan, per-dim busy time / wire bytes, BW utilization (the
+paper's weighted-average metric), and per-dim activity timelines (Fig. 9).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+
+from repro.core.chunking import Chunk
+from repro.core.latency_model import LatencyModel
+from repro.topology import Topology
+
+OpId = tuple[int, int]  # (chunk_id, stage_idx)
+
+
+@dataclass
+class StageTask:
+    chunk_id: int
+    stage_idx: int
+    dim: int
+    wire_bytes: float
+    fixed_delay: float
+    arrival_seq: int = 0
+    ready_time: float = 0.0
+
+    @property
+    def op_id(self) -> OpId:
+        return (self.chunk_id, self.stage_idx)
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    dim_busy: list[float]
+    dim_wire_bytes: list[float]
+    dim_activity: list[list[tuple[float, float]]]  # intervals w/ pending work
+    dim_op_order: list[list[OpId]]                 # service order per dim
+
+    def avg_bw_utilization(self, topology: Topology) -> float:
+        """Weighted average BW utilization (weights = per-dim BW budget)."""
+        if self.makespan <= 0:
+            return 1.0
+        total_bw = topology.total_bw_bytes
+        moved = sum(self.dim_wire_bytes)
+        return moved / (self.makespan * total_bw)
+
+    def activity_rate(self, dim: int) -> float:
+        if self.makespan <= 0:
+            return 0.0
+        return sum(e - s for s, e in self.dim_activity[dim]) / self.makespan
+
+
+def _build_tasks(
+    latency_model: LatencyModel, chunks: list[Chunk], id_offset: int = 0
+) -> dict[OpId, StageTask]:
+    tasks: dict[OpId, StageTask] = {}
+    for chunk in chunks:
+        size = chunk.size_bytes
+        cid = chunk.index + id_offset
+        for s, (phase, dim) in enumerate(chunk.schedule):
+            wire, size = latency_model.stage_wire_bytes(dim, phase, size)
+            tasks[(cid, s)] = StageTask(
+                chunk_id=cid,
+                stage_idx=s,
+                dim=dim,
+                wire_bytes=wire,
+                fixed_delay=latency_model.step_delay(dim, phase),
+            )
+    return tasks
+
+
+def simulate(
+    topology: Topology,
+    chunk_groups: list[list[Chunk]],
+    *,
+    intra: str = "SCF",
+    fusion: bool = True,
+    fusion_limit: int = 8,
+    enforced_order: list[list[OpId]] | None = None,
+    jitter: float = 0.0,
+    seed: int = 0,
+) -> SimResult:
+    """Simulate one or more collectives (``chunk_groups``) issued at t=0.
+
+    ``intra``: 'FIFO' | 'SCF' intra-dimension discipline (Sec. 4.3).
+    ``fusion``: fuse ops that cannot individually saturate a dim's BW.
+    ``enforced_order``: per-dim list of op ids that must be served in order
+        (Sec. 4.6.2); a dim idles rather than serving out of turn.
+    ``jitter``: multiplicative service-time noise amplitude (consistency
+        experiments; deterministic given ``seed``).
+    """
+    import random
+
+    rng = random.Random(seed)
+    lm = LatencyModel(topology)
+    num_dims = topology.num_dims
+
+    tasks: dict[OpId, StageTask] = {}
+    offset = 0
+    for group in chunk_groups:
+        tasks.update(_build_tasks(lm, group, id_offset=offset))
+        if group:
+            offset += max(c.index for c in group) + 1
+
+    # Chunk chains: stage s+1 becomes ready when stage s completes.
+    chain_len: dict[int, int] = {}
+    for cid, s in tasks:
+        chain_len[cid] = max(chain_len.get(cid, 0), s + 1)
+
+    queues: list[list[StageTask]] = [[] for _ in range(num_dims)]
+    busy_until = [0.0] * num_dims
+    dim_busy = [0.0] * num_dims
+    dim_wire = [0.0] * num_dims
+    dim_order: list[list[OpId]] = [[] for _ in range(num_dims)]
+    activity: list[list[tuple[float, float]]] = [[] for _ in range(num_dims)]
+    pending_since = [None] * num_dims  # type: list[float | None]
+    enforced_pos = [0] * num_dims
+    seq = itertools.count()
+
+    # Event heap: (time, tiebreak, kind, payload)
+    events: list[tuple[float, int, str, object]] = []
+
+    def push_ready(task: StageTask, t: float) -> None:
+        task.ready_time = t
+        task.arrival_seq = next(seq)
+        heapq.heappush(events, (t, task.arrival_seq, "ready", task))
+
+    for cid in chain_len:
+        push_ready(tasks[(cid, 0)], 0.0)
+
+    def select_batch(dim: int, now: float) -> list[StageTask]:
+        q = queues[dim]
+        if not q:
+            return []
+        if enforced_order is not None:
+            order = enforced_order[dim]
+            pos = enforced_pos[dim]
+            if pos >= len(order):
+                return []
+            want = order[pos]
+            head = [t for t in q if t.op_id == want]
+            if not head:
+                return []  # idle until the mandated op arrives
+            batch = [head[0]]
+        else:
+            if intra == "SCF":
+                q.sort(key=lambda t: (t.wire_bytes, t.arrival_seq))
+            else:  # FIFO
+                q.sort(key=lambda t: t.arrival_seq)
+            batch = [q[0]]
+        if fusion:
+            bw = topology.dims[dim].aggr_bw_bytes
+            sat_bytes = batch[0].fixed_delay * bw  # wire time < A  => unsaturated
+            total = batch[0].wire_bytes
+            if total < sat_bytes:
+                pool = (
+                    enforced_candidates(dim, batch[0])
+                    if enforced_order is not None
+                    else [t for t in q if t is not batch[0]]
+                )
+                for t in pool:
+                    if len(batch) >= fusion_limit or total >= sat_bytes:
+                        break
+                    batch.append(t)
+                    total += t.wire_bytes
+        for t in batch:
+            q.remove(t)
+        if enforced_order is not None:
+            enforced_pos[dim] += len(batch)
+        return batch
+
+    def enforced_candidates(dim: int, first: StageTask) -> list[StageTask]:
+        """Ops that may fuse after ``first`` without violating the order."""
+        order = enforced_order[dim]
+        pos = enforced_pos[dim] + 1
+        ready_ids = {t.op_id: t for t in queues[dim] if t is not first}
+        out = []
+        while pos < len(order) and order[pos] in ready_ids:
+            out.append(ready_ids[order[pos]])
+            pos += 1
+        return out
+
+    def try_start(dim: int, now: float) -> None:
+        if busy_until[dim] > now:
+            return
+        batch = select_batch(dim, now)
+        if not batch:
+            return
+        bw = topology.dims[dim].aggr_bw_bytes
+        a = max(t.fixed_delay for t in batch)
+        wire = sum(t.wire_bytes for t in batch)
+        occupy = wire / bw  # dim is a BW resource; steps pipeline
+        if jitter:
+            occupy *= 1.0 + jitter * rng.random()
+        free_at = now + occupy
+        busy_until[dim] = free_at
+        dim_busy[dim] += occupy
+        dim_wire[dim] += wire
+        for t in batch:
+            dim_order[dim].append(t.op_id)
+        # Chunk stages complete A after their data drains (latency term).
+        heapq.heappush(events, (free_at, next(seq), "free", dim))
+        heapq.heappush(events, (free_at + a, next(seq), "done", (dim, batch)))
+
+    makespan = 0.0
+    while events:
+        now, _, kind, payload = heapq.heappop(events)
+        makespan = max(makespan, now)
+        if kind == "ready":
+            task: StageTask = payload  # type: ignore[assignment]
+            if pending_since[task.dim] is None:
+                pending_since[task.dim] = now
+            queues[task.dim].append(task)
+            try_start(task.dim, now)
+        elif kind == "free":
+            dim: int = payload  # type: ignore[assignment]
+            if not queues[dim] and pending_since[dim] is not None:
+                activity[dim].append((pending_since[dim], now))
+                pending_since[dim] = None
+            try_start(dim, now)
+        else:  # done — chunk's next stage becomes ready
+            dim, batch = payload  # type: ignore[misc]
+            for t in batch:
+                nxt = (t.chunk_id, t.stage_idx + 1)
+                if nxt in tasks:
+                    push_ready(tasks[nxt], now)
+
+    for dim in range(num_dims):
+        if pending_since[dim] is not None:  # pragma: no cover - safety
+            activity[dim].append((pending_since[dim], makespan))
+
+    return SimResult(makespan, dim_busy, dim_wire, activity, dim_order)
+
+
+def simulate_scheduled(
+    topology: Topology,
+    collective: str,
+    size_bytes: float,
+    *,
+    policy: str = "themis",
+    chunks_per_collective: int = 64,
+    intra: str = "SCF",
+    fusion: bool = True,
+    water_filling: bool = False,
+) -> tuple[SimResult, list[Chunk]]:
+    """Schedule one collective with ``policy`` and simulate it."""
+    from repro.core.scheduler import schedule_collective
+
+    chunks = schedule_collective(
+        topology,
+        collective,
+        size_bytes,
+        chunks_per_collective,
+        policy,
+        water_filling=water_filling,
+    )
+    res = simulate(topology, [chunks], intra=intra, fusion=fusion)
+    return res, chunks

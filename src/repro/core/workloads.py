@@ -1,0 +1,336 @@
+"""End-to-end training-iteration models for the paper's four workloads
+(Sec. 5.2 / Fig. 12): ResNet-152, GNMT, DLRM, Transformer-1T.
+
+Each workload is reduced to the quantities ASTRA-SIM consumes:
+  * compute time per iteration from roofline FP16 on an A100-class NPU
+    (312 TFLOP/s, paper Sec. 5.1),
+  * the stream of *exposed* communication operations: per-tensor/bucket
+    data-parallel gradient All-Reduces at the end of back-propagation, and
+    per-layer model-parallel collectives on the critical path (T-1T).
+
+Parallelization matches Sec. 5.2: ResNet-152/GNMT pure DP; DLRM DP for MLPs
+with model-parallel embeddings whose All-to-All overlaps with compute (not
+exposed); Transformer-1T Megatron-style MP over the first network dims up
+to 128 NPUs + ZeRO-2 DP over the remaining dims (DP collectives therefore
+see a single network dimension, where baseline == Themis, as the paper
+notes).
+
+Structural parameters (layer shapes, sequence lengths) are documented
+assumptions — the paper does not publish them — chosen to land in the
+communication-bound regime the paper targets ("high ratio of communication
+to compute").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.latency_model import LatencyModel
+from repro.core.scheduler import ThemisScheduler
+from repro.core.simulator import simulate
+from repro.topology import NetworkDim, Topology
+
+A100_FP16_FLOPS = 312e12  # roofline FP16 (paper Sec. 5.1)
+FP16 = 2  # bytes
+
+
+# --------------------------------------------------------------------------
+# Workload definitions
+# --------------------------------------------------------------------------
+@dataclass
+class CommOp:
+    """One exposed collective in the iteration timeline."""
+
+    collective: str            # 'AR' | 'RS' | 'AG'
+    size_bytes: float
+    count: int = 1             # how many times per iteration (serialized)
+    scope: str = "dp"          # 'dp' -> DP dims, 'mp' -> MP dims
+    batched: bool = False      # True: all `count` issued together (one sync)
+
+
+@dataclass
+class Workload:
+    name: str
+    compute_fwd_s: float
+    compute_bwd_s: float
+    comm_ops: list[CommOp] = field(default_factory=list)
+    mp_npus: int = 1           # model-parallel group size (leading dims)
+
+    @property
+    def compute_s(self) -> float:
+        return self.compute_fwd_s + self.compute_bwd_s
+
+
+def resnet152_param_buckets() -> list[float]:
+    """Per-bucket fp16 gradient bytes for ResNet-152 (bottleneck v1.5).
+
+    Exact conv/fc tensor sizes (~60.2M params) bucketed per stage-block —
+    gradient AR is issued per block as back-propagation retires it.
+    """
+    blocks = [(3, 64), (8, 128), (36, 256), (3, 512)]
+    buckets: list[float] = []
+    in_ch = 64
+    params_conv1 = 7 * 7 * 3 * 64
+    buckets.append(params_conv1 * FP16)
+    for n_blocks, planes in blocks:
+        out_ch = planes * 4
+        for b in range(n_blocks):
+            p = in_ch * planes            # 1x1 reduce
+            p += 3 * 3 * planes * planes  # 3x3
+            p += planes * out_ch          # 1x1 expand
+            if b == 0:
+                p += in_ch * out_ch       # downsample projection
+            p += 2 * (planes * 2 + out_ch)  # BN scale/shift (approx)
+            buckets.append(p * FP16)
+            in_ch = out_ch
+    buckets.append((2048 * 1000 + 1000) * FP16)  # fc
+    return buckets
+
+
+def make_resnet152(batch_per_npu: int = 32) -> Workload:
+    """ResNet-152 pure-DP: one fused gradient AR at the end of bwd
+    (Sec. 6.2: 'NPUs communicate their locally computed weight gradients
+    through All-Reduce')."""
+    grad_bytes = sum(resnet152_param_buckets())  # ~120 MB fp16
+    flops_fwd = 11.58e9 * batch_per_npu          # 11.58 GFLOPs/img fwd
+    return Workload(
+        name="ResNet-152",
+        compute_fwd_s=flops_fwd / A100_FP16_FLOPS,
+        compute_bwd_s=2 * flops_fwd / A100_FP16_FLOPS,
+        comm_ops=[CommOp("AR", grad_bytes, count=1, scope="dp", batched=True)],
+    )
+
+
+def make_gnmt(batch_per_npu: int = 128, seq_len: int = 20) -> Workload:
+    """GNMT: 8-layer enc + 8-layer dec LSTM (1024 units), 32k vocab."""
+    h, vocab = 1024, 32 * 1024
+    lstm_layer = 4 * (h * h + h * h + 2 * h)      # i,f,g,o gates (x & h)
+    params = 16 * lstm_layer + 3 * vocab * h + 2 * h * h  # ~235M
+    tokens = batch_per_npu * seq_len
+    flops_fwd = 2 * params * tokens
+    return Workload(
+        name="GNMT",
+        compute_fwd_s=flops_fwd / A100_FP16_FLOPS,
+        compute_bwd_s=2 * flops_fwd / A100_FP16_FLOPS,
+        comm_ops=[CommOp("AR", params * FP16, count=1, scope="dp", batched=True)],
+    )
+
+
+def make_dlrm(batch_per_npu: int = 512) -> Workload:
+    """DLRM (production-scale MLPs, per [53]/[49]-style configs).
+
+    Embedding tables are model-parallel; their All-to-All overlaps with
+    bottom-MLP compute and is not exposed (paper Sec. 6.2).  Exposed comm =
+    one fused DP gradient AR of the MLP tensors.  MLP widths are sized to a
+    production-scale ~50M dense params so the collective (~100 MB fp16)
+    falls in the paper's stated workload-collective range (Sec. 6.1:
+    100 MB - 1 GB 'covers our target workloads collectives').
+    """
+    bottom = [(2048, 4096), (4096, 2048), (2048, 1024)]
+    top = [(4096, 4096), (4096, 2048), (2048, 1024), (1024, 512), (512, 1)]
+    tensors = [(i * o + o) * FP16 for i, o in bottom + top]
+    params = sum(t // FP16 for t in tensors)  # ~50M
+    flops_fwd = 2 * params * batch_per_npu
+    return Workload(
+        name="DLRM",
+        compute_fwd_s=flops_fwd / A100_FP16_FLOPS,
+        compute_bwd_s=2 * flops_fwd / A100_FP16_FLOPS,
+        comm_ops=[CommOp("AR", sum(tensors), count=1, scope="dp", batched=True)],
+    )
+
+
+def make_transformer_1t(
+    batch_per_replica: int = 16, seq: int = 2048, total_npus: int = 1024
+) -> Workload:
+    """Transformer-1T: h=25600, L=128 (12*h^2*L ~= 1.007T params).
+
+    Megatron MP over the first dims up to 128 NPUs; ZeRO-2 DP over the rest.
+    Exposed MP comm: one activation AR per MP region x 2 regions (attn/MLP)
+    x fwd+bwd per layer (4 AR/layer).  Exposed DP comm (ZeRO-2): grad RS +
+    param AG of the per-MP-shard parameters on the last dim only.
+    """
+    h, layers = 25600, 128
+    mp = 128
+    dp = total_npus // mp
+    params = 12 * h * h * layers
+    act_ar = batch_per_replica * seq * h * FP16
+    shard_bytes = params / mp * FP16
+    tokens_global = batch_per_replica * dp * seq
+    flops_total = 6 * params * tokens_global
+    compute_per_npu = flops_total / total_npus / A100_FP16_FLOPS
+    return Workload(
+        name="Transformer-1T",
+        compute_fwd_s=compute_per_npu / 3,
+        compute_bwd_s=2 * compute_per_npu / 3,
+        comm_ops=[
+            CommOp("AR", act_ar, count=4 * layers, scope="mp"),
+            CommOp("RS", shard_bytes, count=1, scope="dp", batched=True),
+            CommOp("AG", shard_bytes, count=1, scope="dp", batched=True),
+        ],
+        mp_npus=mp,
+    )
+
+
+ALL_WORKLOADS = {
+    "resnet152": make_resnet152,
+    "gnmt": make_gnmt,
+    "dlrm": make_dlrm,
+    "transformer_1t": make_transformer_1t,
+}
+
+
+# --------------------------------------------------------------------------
+# Iteration-time engine
+# --------------------------------------------------------------------------
+def split_topology(topology: Topology, mp_npus: int) -> tuple[Topology, Topology]:
+    """Split dims into (MP sub-topology, DP sub-topology) with the MP group
+    covering the first ``mp_npus`` NPUs (paper Sec. 5.2).
+
+    If the MP boundary falls inside a dimension, that dimension is split
+    into two logical sub-dimensions sharing the same fabric (e.g. 2D 16x64
+    with MP=128 -> MP over 16x8, DP over the remaining 8-way groups).
+    """
+    if mp_npus <= 1:
+        return Topology(topology.name + "-mp", ()), topology
+    mp_dims: list[NetworkDim] = []
+    dp_dims: list[NetworkDim] = []
+    prod = 1
+    for d in topology.dims:
+        if prod >= mp_npus:
+            dp_dims.append(d)
+            continue
+        if prod * d.npus <= mp_npus:
+            mp_dims.append(d)
+            prod *= d.npus
+        else:
+            inner = mp_npus // prod  # boundary dim splits into inner x outer
+            outer = d.npus // inner
+            if inner > 1:
+                mp_dims.append(NetworkDim(inner, d.topo, d.link_gbps,
+                                          d.links_per_npu, d.step_latency_s))
+            if outer > 1:
+                dp_dims.append(NetworkDim(outer, d.topo, d.link_gbps,
+                                          d.links_per_npu, d.step_latency_s))
+            prod *= d.npus
+    return (
+        Topology(topology.name + "-mp", tuple(mp_dims)),
+        Topology(topology.name + "-dp", tuple(dp_dims)),
+    )
+
+
+@dataclass
+class IterationResult:
+    compute_s: float
+    exposed_dp_s: float
+    exposed_mp_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.exposed_dp_s + self.exposed_mp_s
+
+
+def _sim_stream(
+    topology: Topology,
+    ops: list[CommOp],
+    policy: str,
+    chunks_per_collective: int,
+    intra: str,
+) -> float:
+    """Simulate a batch of collectives issued together (one sync point)."""
+    if topology.num_dims == 0:
+        return 0.0
+    lm = LatencyModel(topology)
+    groups = []
+    for op in ops:
+        sched = ThemisScheduler(lm, policy)
+        groups.append(
+            sched.schedule_collective(op.collective, op.size_bytes, chunks_per_collective)
+        )
+    return simulate(topology, groups, intra=intra).makespan
+
+
+def calibrate_compute(
+    workload: Workload,
+    topologies: list[Topology],
+    target_ideal_speedup: float,
+    *,
+    chunks_per_collective: int = 64,
+) -> float:
+    """Solve for the compute time that matches the paper's *Ideal* speedup.
+
+    The paper does not publish per-workload compute times or bucket layout;
+    collective *sizes* follow from the published model structures, but the
+    compute:comm mix is the one free scalar.  We bisect the compute time so
+    that mean_topologies[(C + comm_baseline)/(C + comm_ideal)] equals the
+    paper's reported Ideal end-to-end speedup (Sec. 6.2: 1.54 / 1.32 / 1.33 /
+    1.26).  Themis speedups then remain genuine predictions to validate
+    against the paper's 1.49 / 1.30 / 1.30 / 1.25.  Returns calibrated C and
+    mutates the workload's fwd/bwd split (1:2) in place.
+    """
+    pairs = []
+    for topo in topologies:
+        b = iteration_time(workload, topo, "baseline", intra="FIFO",
+                           chunks_per_collective=chunks_per_collective)
+        i = iteration_time(workload, topo, "ideal")
+        pairs.append((b.exposed_dp_s + b.exposed_mp_s, i.exposed_dp_s + i.exposed_mp_s))
+
+    def ideal_avg(c: float) -> float:
+        return sum((c + cb) / (c + ci) for cb, ci in pairs) / len(pairs)
+
+    lo, hi = 0.0, max(cb for cb, _ in pairs) * 100 + 1.0
+    if ideal_avg(lo) < target_ideal_speedup:  # even zero compute can't reach
+        c = lo
+    else:
+        for _ in range(80):
+            mid = 0.5 * (lo + hi)
+            if ideal_avg(mid) > target_ideal_speedup:
+                lo = mid
+            else:
+                hi = mid
+        c = 0.5 * (lo + hi)
+    workload.compute_fwd_s = c / 3.0
+    workload.compute_bwd_s = 2.0 * c / 3.0
+    return c
+
+
+def iteration_time(
+    workload: Workload,
+    topology: Topology,
+    policy: str = "themis",
+    *,
+    chunks_per_collective: int = 64,
+    intra: str = "SCF",
+) -> IterationResult:
+    """Total iteration latency = compute + exposed comm (paper Sec. 6.2)."""
+    mp_topo, dp_topo = split_topology(topology, workload.mp_npus)
+    if policy == "ideal":
+        dp_lm = LatencyModel(dp_topo) if dp_topo.num_dims else None
+        mp_lm = LatencyModel(mp_topo) if mp_topo.num_dims else None
+        exposed_dp = sum(
+            dp_lm.ideal_time(o.collective, o.size_bytes) * o.count
+            for o in workload.comm_ops
+            if o.scope == "dp" and dp_lm
+        )
+        exposed_mp = sum(
+            mp_lm.ideal_time(o.collective, o.size_bytes) * o.count
+            for o in workload.comm_ops
+            if o.scope == "mp" and mp_lm
+        )
+        return IterationResult(workload.compute_s, exposed_dp, exposed_mp)
+
+    # DP collectives: all buckets ready at end of bwd -> one batched stream.
+    dp_ops = [o for o in workload.comm_ops if o.scope == "dp"]
+    dp_stream: list[CommOp] = []
+    for o in dp_ops:
+        dp_stream.extend([CommOp(o.collective, o.size_bytes)] * o.count)
+    exposed_dp = _sim_stream(dp_topo, dp_stream, policy, chunks_per_collective, intra)
+
+    # MP collectives: on the layer critical path -> serialized, simulate one
+    # instance and multiply by count.
+    exposed_mp = 0.0
+    for o in workload.comm_ops:
+        if o.scope != "mp":
+            continue
+        one = _sim_stream(mp_topo, [CommOp(o.collective, o.size_bytes)], policy,
+                          chunks_per_collective, intra)
+        exposed_mp += one * o.count
+    return IterationResult(workload.compute_s, exposed_dp, exposed_mp)

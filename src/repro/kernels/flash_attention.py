@@ -1,0 +1,127 @@
+"""Pallas TPU flash attention (forward): blockwise online softmax.
+
+TPU adaptation of the GPU flash-attention algorithm: instead of warp-level
+softmax reductions in shared memory, the kernel streams K/V blocks
+HBM->VMEM under an explicit BlockSpec tiling, keeps the running
+(max, denom, accumulator) for one q-block in VMEM scratch across the
+innermost grid dimension, and sizes blocks so the working set
+(bq x d + 2 x bk x d + bq x bk fp32) fits VMEM with MXU-aligned (128) tiles.
+
+Grid: (batch, q_head, num_q_blocks, num_kv_blocks) — kv innermost so the
+scratch carries across it; GQA is folded into the K/V BlockSpec index map
+(kv head = q head // group size).  Supports causal + sliding-window masks.
+Backward is recompute-based via ``jax.custom_vjp`` in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, window: int,
+                 block_q: int, block_k: int, nk: int, seq_k: int):
+    """One (q-block, kv-block) step; scratch persists over the kv grid dim."""
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                          # (bq, bk)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_k
+    if causal:
+        mask = jnp.logical_and(mask, qpos >= kpos)
+    if window > 0:
+        mask = jnp.logical_and(mask, kpos > qpos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B,S,H,d); k,v: (B,T,KV,d) -> (B,S,H,d)."""
+    b, sq, h, d = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    groups = h // kvh
+    scale = 1.0 / math.sqrt(d)
+
+    bq = min(block_q, sq)
+    bk = min(block_k, t)
+    pad_q = (-sq) % bq
+    pad_k = (-t) % bk
+    qt = jnp.moveaxis(q, 2, 1)                         # (B,H,S,d)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = (sq + pad_q) // bq
+    nk = (t + pad_k) // bk
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, nk=nk, seq_k=t,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, i, j: (b_, h_ // groups, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, i, j: (b_, h_ // groups, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq + pad_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :sq]
+    return jnp.moveaxis(out, 1, 2)

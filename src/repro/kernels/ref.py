@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import naive_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Materialized-scores attention — the kernel oracle."""
+    return naive_attention(q, k, v, causal=causal, window=window)
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Sequential linear recurrence h_t = a_t h_{t-1} + b_t."""
+    bsz, s, c = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, c), jnp.float32)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h2 = a_t * h + b_t
+        return h2, h2
+
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w

@@ -1,0 +1,1 @@
+from repro.models.registry import ModelApi, build_model, count_params  # noqa: F401

@@ -1,0 +1,434 @@
+"""Shared layers: norms, RoPE, attention (naive + XLA-flash), MLP, inits.
+
+Sharding is expressed through ``constrain(x, *axes)`` which applies a
+``with_sharding_constraint`` when a mesh context is active (set by the
+launcher / train step) and is a no-op otherwise, keeping model code mesh-
+agnostic.  Axis vocabulary: "dp" (batch: pod+data), "tp" (model), None.
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any
+
+# -- mesh context -----------------------------------------------------------
+_CTX: dict = {"mesh": None, "dp_axes": ("data",), "tp_axis": "model",
+              "sp": False}
+
+
+@contextmanager
+def mesh_context(mesh, dp_axes=("data",), tp_axis="model", sp: bool = False):
+    """``sp=True`` enables sequence parallelism: the residual stream's seq
+    dim ("sp" in constraint vocabulary) shards over the model axis between
+    blocks, cutting the layer-carry memory TP-fold."""
+    old = dict(_CTX)
+    _CTX.update(mesh=mesh, dp_axes=tuple(dp_axes), tp_axis=tp_axis, sp=sp)
+    try:
+        yield
+    finally:
+        _CTX.update(old)
+
+
+def _resolve(axis: str | None):
+    if axis == "dp":
+        a = _CTX["dp_axes"]
+        return a if len(a) > 1 else a[0]
+    if axis == "tp":
+        return _CTX["tp_axis"]
+    if axis == "sp":
+        return _CTX["tp_axis"] if _CTX["sp"] else None
+    return None
+
+
+def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Apply a named-axis sharding constraint if a mesh is active.
+
+    Divisibility-safe: an axis whose mesh size does not divide the dim is
+    dropped (replicated) so MQA heads, odd vocab etc. never hard-fail."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    names = []
+    used: set = set()
+    for i, a in enumerate(axes):
+        r = _resolve(a)
+        if r is not None:
+            sizes = [r] if isinstance(r, str) else list(r)
+            need = 1
+            for s in sizes:
+                need *= mesh.shape.get(s, 1)
+            if x.shape[i] % need != 0 or any(s in used for s in sizes):
+                r = None
+            else:
+                used.update(sizes)
+        names.append(r)
+    spec = P(*names)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec)
+    )
+
+
+def remat_policy(cfg):
+    """Activation-checkpoint policy for the per-layer remat wrapper.
+
+    Default: save nothing inside a block — the layer-scan carry already
+    checkpoints every layer input, so live activations are O(L x tokens x D)
+    instead of O(L x tokens x d_ff) (saved-dots blew v5e HBM at 4k x 256).
+    """
+    policy = getattr(cfg, "remat_policy", "full")
+    if policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None  # save nothing; recompute the whole block in backward
+
+
+# -- inits ------------------------------------------------------------------
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# -- norms --------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+# -- rotary embeddings --------------------------------------------------------
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int, offset=0) -> jax.Array:
+    pos = jnp.arange(offset, offset + seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((seq, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# -- attention ----------------------------------------------------------------
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    # (B, T, KV, hd) -> (B, T, KV*groups, hd)
+    if groups == 1:
+        return k
+    b, t, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, kv, groups, hd)).reshape(
+        b, t, kv * groups, hd
+    )
+
+
+def naive_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+) -> jax.Array:
+    """Reference attention.  q: (B,S,H,hd); k,v: (B,T,KV,hd).
+
+    ``q_offset``: absolute position of q[0] (for decode: T-1 typically).
+    ``window`` > 0: sliding-window (local) attention of that width.
+    Materializes (S,T) scores — only for small shapes / oracles.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    qpos = jnp.arange(s) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((s, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def _flash_blocks(q, k, v, block_q, block_k):
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    nq = -(-s // bq)
+    nk = -(-t // bk)
+    pad_q = nq * bq - s
+    pad_k = nk * bk - t
+    qf = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kf = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vf = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    qb = qf.reshape(b, nq, bq, h, hd).transpose(1, 0, 2, 3, 4)
+    kb = kf.reshape(b, nk, bk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vb = vf.reshape(b, nk, bk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    return qb, kb, vb, (bq, bk, nq, nk)
+
+
+def _block_mask(qpos, kpos, t, causal, window):
+    mask = kpos[None, :] < t
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if window > 0:
+        mask = mask & (kpos[None, :] > (qpos[:, None] - window))
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, q_offset, causal, window, block_q, block_k):
+    """Returns (out (B,S,H,hd), lse (B,H,S))."""
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    groups = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qb, kb, vb, (bq, bk, nq, nk) = _flash_blocks(q, k, v, block_q, block_k)
+
+    def q_block(carry, inp):
+        qi, qblk = inp
+        qpos = qi * bq + jnp.arange(bq) + q_offset
+
+        def kv_block(state, kv_in):
+            m, l, acc = state
+            ki, kblk, vblk = kv_in
+            kr = _repeat_kv(kblk, groups)
+            vr = _repeat_kv(vblk, groups)
+            sc = jnp.einsum("bqhd,bkhd->bhqk", qblk, kr).astype(jnp.float32) * scale
+            kpos = ki * bk + jnp.arange(bk)
+            mask = _block_mask(qpos, kpos, t, causal, window)
+            sc = jnp.where(mask[None, None], sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vr.dtype), vr
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, h, bq), -1e30, jnp.float32),
+            jnp.zeros((b, h, bq), jnp.float32),
+            jnp.zeros((b, h, bq, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_block, init, (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return carry, (out.astype(q.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    # outs: (nq, B, H, bq, hd) -> (B, S, H, hd)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nq * bq, h, hd)
+    lse = lses.transpose(1, 2, 0, 3).reshape(b, h, nq * bq)
+    return out[:, :s], lse[:, :, :s]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash_attention_xla(q, k, v, q_offset, causal, window, block_q, block_k):
+    out, _ = _flash_fwd_impl(q, k, v, q_offset, causal, window, block_q, block_k)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, q_offset, causal, window, block_q, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, q_offset, causal, window, block_q, block_k)
+    return out, (q, k, v, q_offset, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, block_q, block_k, res, g):
+    """Recompute-based flash backward: O(S) memory, no saved probabilities.
+
+    Outer scan over q blocks; dk/dv accumulate in an fp32 carry; for each
+    block the probabilities are recomputed from (q, k, lse).
+    """
+    q, k, v, q_offset, out, lse = res
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    groups = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qb, kb, vb, (bq, bk, nq, nk) = _flash_blocks(q, k, v, block_q, block_k)
+    pad_q = nq * bq - s
+    gp = jnp.pad(g, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else g
+    op = jnp.pad(out, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else out
+    gq = gp.reshape(b, nq, bq, h, hd).transpose(1, 0, 2, 3, 4)  # (nq,B,bq,H,hd)
+    ob = op.reshape(b, nq, bq, h, hd).transpose(1, 0, 2, 3, 4)
+    lseb = jnp.pad(lse, ((0, 0), (0, 0), (0, pad_q))).reshape(
+        b, h, nq, bq).transpose(2, 0, 1, 3)                     # (nq,B,H,bq)
+    delta = (gq.astype(jnp.float32) * ob.astype(jnp.float32)).sum(-1)
+    delta = delta.transpose(0, 1, 3, 2)                         # (nq,B,H,bq)
+
+    def q_block(carry, inp):
+        dk_acc, dv_acc = carry                                # (B,KV,T',hd) f32
+        qi, qblk, gblk, lse_i, d_i = inp
+
+        qpos = qi * bq + jnp.arange(bq) + q_offset
+
+        def kv_block(state, kv_in):
+            dk_a, dv_a, dq_b = state
+            ki, kblk, vblk = kv_in
+            kr = _repeat_kv(kblk, groups)                     # (B,bk,H,hd)
+            vr = _repeat_kv(vblk, groups)
+            sc = jnp.einsum("bqhd,bkhd->bhqk", qblk, kr).astype(jnp.float32) * scale
+            kpos = ki * bk + jnp.arange(bk)
+            mask = _block_mask(qpos, kpos, t, causal, window)
+            sc = jnp.where(mask[None, None], sc, -1e30)
+            p = jnp.exp(sc - lse_i[..., None])                # (B,H,bq,bk)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", gblk, vr).astype(jnp.float32)
+            ds = p * (dp - d_i[..., None]) * scale
+            dv_h = jnp.einsum("bhqk,bqhd->bkhd", p.astype(gblk.dtype), gblk)
+            dk_h = jnp.einsum("bhqk,bqhd->bkhd", ds.astype(qblk.dtype), qblk)
+            # fold GQA groups back onto kv heads
+            dv_g = dv_h.reshape(b, bk, kvh, groups, hd).sum(3)
+            dk_g = dk_h.reshape(b, bk, kvh, groups, hd).sum(3)
+            dk_a = jax.lax.dynamic_update_slice(
+                dk_a, dk_a_slice_add(dk_a, dk_g, ki, bk), (0, ki * bk, 0, 0))
+            dv_a = jax.lax.dynamic_update_slice(
+                dv_a, dk_a_slice_add(dv_a, dv_g, ki, bk), (0, ki * bk, 0, 0))
+            dq_b = dq_b + jnp.einsum("bhqk,bkhd->bqhd", ds.astype(kr.dtype), kr
+                                     ).astype(jnp.float32)
+            return (dk_a, dv_a, dq_b), None
+
+        def dk_a_slice_add(acc, add, ki, bk_):
+            cur = jax.lax.dynamic_slice(
+                acc, (0, ki * bk_, 0, 0), (b, bk_, kvh, hd))
+            return cur + add.astype(jnp.float32)
+
+        dq0 = jnp.zeros((b, bq, h, hd), jnp.float32)
+        (dk_acc, dv_acc, dq_b), _ = jax.lax.scan(
+            kv_block, (dk_acc, dv_acc, dq0), (jnp.arange(nk), kb, vb))
+        return (dk_acc, dv_acc), dq_b
+
+    zero_kv = jnp.zeros((b, nk * bk, kvh, hd), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(
+        q_block, (zero_kv, zero_kv), (jnp.arange(nq), qb, gq, lseb, delta))
+    dq = dqs.transpose(1, 0, 2, 3, 4).reshape(b, nq * bq, h, hd)[:, :s]
+    return (dq.astype(q.dtype), dk[:, :t].astype(k.dtype),
+            dv[:, :t].astype(v.dtype), jnp.zeros_like(q_offset))
+
+
+_flash_attention_xla.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention_xla(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+    block_q: int = 512,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Blockwise online-softmax attention in pure XLA with a recompute-based
+    custom VJP (O(S) memory in both passes — naive autodiff through the scan
+    would save the O(S^2) probability blocks)."""
+    return _flash_attention_xla(
+        q, k, v, jnp.asarray(q_offset, jnp.int32), causal, window,
+        block_q, block_k,
+    )
+
+
+def attention(
+    q, k, v, *, impl: str = "xla_flash", causal=True, window=0, q_offset=0
+):
+    if impl == "naive" or q.shape[1] == 1:
+        return naive_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    if impl == "pallas":
+        from repro.kernels import ops
+
+        return ops.flash_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset)
+    return flash_attention_xla(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+# -- MLP ----------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], (d_model, d_ff), 0, dtype),
+        "wo": dense_init(ks[1], (d_ff, d_model), 0, dtype),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[2], (d_model, d_ff), 0, dtype)
+    return p
+
+
+def apply_mlp(p: Params, x: jax.Array, gated: bool) -> jax.Array:
+    h = x @ p["wi"].astype(x.dtype)
+    h = constrain(h, "dp", None, "tp")
+    if gated:
+        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * h
+    else:
+        h = jax.nn.gelu(h)
+    out = h @ p["wo"].astype(x.dtype)
+    return constrain(out, "dp", "sp", None)
+
+
+# -- losses ---------------------------------------------------------------------
+@jax.custom_vjp
+def _ce_from_logits(logits: jax.Array, labels: jax.Array, weights: jax.Array):
+    """Token-weighted cross entropy; memory-lean VJP.
+
+    Saves only (bf16 logits, per-token lse) and recomputes the softmax in
+    the backward — plain autodiff keeps three fp32 (tokens x vocab) buffers
+    (cast, exp, grad) live, which dominated HBM at 151k vocab."""
+    nll, _ = _ce_fwd_impl(logits, labels)
+    return (nll * weights).sum()
+
+
+def _ce_fwd_impl(logits, labels):
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return lse - gold, lse
+
+
+def _ce_vjp_fwd(logits, labels, weights):
+    nll, lse = _ce_fwd_impl(logits, labels)
+    return (nll * weights).sum(), (logits, labels, weights, lse)
+
+
+def _ce_vjp_bwd(res, g):
+    logits, labels, weights, lse = res
+    p = jnp.exp(logits.astype(jnp.float32) - lse[..., None])
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    dlogits = (p - onehot) * (g * weights)[..., None]
+    return dlogits.astype(logits.dtype), None, None
+
+
+_ce_from_logits.defvjp(_ce_vjp_fwd, _ce_vjp_bwd)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask=None) -> jax.Array:
+    """logits (B,S,V); labels (B,S) int32; mean over valid tokens."""
+    if mask is None:
+        weights = jnp.full(labels.shape, 1.0 / labels.size, jnp.float32)
+    else:
+        m = mask.astype(jnp.float32)
+        weights = m / jnp.maximum(m.sum(), 1.0)
+    return _ce_from_logits(logits, labels, weights)

@@ -1,0 +1,98 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Sort-based, capacity-bounded token dispatch (MaxText/GShard "dropping"
+style), formulated per batch row so every sort/scatter is *local to the
+data shard* under GSPMD — the only cross-device movement is the
+(B, E, C, D) buffer resharding from batch-sharded to expert-sharded layout,
+which XLA lowers to the expert-parallel all-to-all.
+
+Supports shared experts (DeepSeekMoE): ``num_shared_experts`` always-on
+experts folded into one dense gated MLP of width shared*moe_d_ff.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_mlp, constrain, dense_init, init_mlp
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    p = {
+        "router": dense_init(ks[0], (d, e), 0, dtype),
+        "wi": dense_init(ks[1], (e, d, f), 1, dtype),
+        "wg": dense_init(ks[2], (e, d, f), 1, dtype),
+        "wo": dense_init(ks[3], (e, f, d), 1, dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(
+            ks[4], d, cfg.num_shared_experts * cfg.moe_d_ff, True, dtype
+        )
+    return p
+
+
+def expert_capacity(cfg: ModelConfig, tokens_per_row: int) -> int:
+    cap = int(tokens_per_row * cfg.experts_per_token * cfg.capacity_factor
+              / cfg.num_experts)
+    return max(cap, cfg.experts_per_token)
+
+
+def apply_moe(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = expert_capacity(cfg, s)
+    dt = x.dtype
+
+    # --- routing (per token) ---
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)    # (B,S,E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(gates, k)                        # (B,S,k)
+    weights = (weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)).astype(dt)
+
+    # --- per-row dispatch: rank each assignment within its expert ---
+    flat_ids = ids.reshape(b, s * k)                              # (B, A)
+    order = jnp.argsort(flat_ids, axis=-1, stable=True)           # (B, A)
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=-1)
+    # position within expert = index - first index of that expert id
+    seg_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(e), side="left")
+    )(sorted_ids)                                                 # (B, E)
+    pos_in_e = jnp.arange(s * k)[None, :] - jnp.take_along_axis(
+        seg_start, sorted_ids, axis=-1
+    )
+    keep = pos_in_e < c
+    dest = jnp.where(keep, sorted_ids * c + pos_in_e, e * c)      # OOB -> dropped
+    token_of = order // k                                         # source token idx
+
+    # --- scatter tokens into the (B, E*C, D) expert buffer (local per row) ---
+    src = jnp.take_along_axis(x, token_of[..., None], axis=1)     # (B, A, D)
+    buf = jnp.zeros((b, e * c, d), dt)
+    buf = jax.vmap(lambda bu, de, sr: bu.at[de].set(sr, mode="drop"))(buf, dest, src)
+    buf = buf.reshape(b, e, c, d)
+    # a2a: batch-sharded -> expert-sharded
+    buf = constrain(buf, "dp", "tp", None, None)
+
+    # --- expert compute (E sharded over model axis) ---
+    up = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(dt))
+    gate = jnp.einsum("becd,edf->becf", buf, p["wg"].astype(dt))
+    act = jax.nn.silu(gate) * up
+    out = jnp.einsum("becf,efd->becd", act, p["wo"].astype(dt))
+    out = constrain(out, "dp", "tp", None, None)
+
+    # --- combine: gather back + weighted sum (local per row) ---
+    out = constrain(out.reshape(b, e * c, d), "dp", None, None)   # a2a back
+    picked = jax.vmap(lambda o, de: o.at[de].get(mode="fill", fill_value=0.0))(
+        out, dest
+    )                                                             # (B, A, D)
+    w_sorted = jnp.take_along_axis(weights.reshape(b, s * k), order, axis=-1)
+    picked = picked * (w_sorted * keep)[..., None]
+    y = jnp.zeros((b, s, d), dt)
+    y = jax.vmap(lambda yy, to, pk: yy.at[to].add(pk))(y, token_of, picked)
+
+    if cfg.num_shared_experts:
+        y = y + apply_mlp(p["shared"], x, gated=True)
+    return constrain(y, "dp", None, None)

@@ -1,0 +1,295 @@
+"""RecurrentGemma / Griffin: RG-LRU recurrent blocks + local attention.
+
+Block pattern (rec, rec, attn) repeats; layers are scanned per period with
+an unscanned tail for layer counts not divisible by the period (26 = 8x3+2).
+
+RG-LRU (arXiv:2402.19427):
+    i_t = sigmoid(W_x x_t),  r_t = sigmoid(W_a x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+Training uses an associative scan (parallel prefix); decode carries h.
+Local attention uses a sliding window (2048) with a ring-buffer cache, so a
+500k-token decode holds O(window) state — the sub-quadratic long_500k path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tr
+from repro.models.common import (
+    apply_mlp,
+    constrain,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    init_mlp,
+    remat_policy,
+    rms_norm,
+)
+
+RGLRU_C = 8.0
+
+
+# -- RG-LRU ------------------------------------------------------------------
+def init_rec(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, r, cw = cfg.d_model, cfg.d_rnn, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    return {
+        "linear_y": dense_init(ks[0], (d, r), 0, dtype),
+        "linear_x": dense_init(ks[1], (d, r), 0, dtype),
+        "conv_w": dense_init(ks[2], (cw, r), 0, dtype),
+        "w_input_gate": dense_init(ks[3], (r, r), 0, dtype),
+        "w_a_gate": dense_init(ks[4], (r, r), 0, dtype),
+        "lam": jnp.linspace(0.5, 4.0, r).astype(dtype),   # Lambda init spread
+        "linear_out": dense_init(ks[5], (r, d), 0, dtype),
+    }
+
+
+def _rglru_coeffs(p, x):
+    """x: (B,S,R) -> (a, b) of the linear recurrence h = a*h + b."""
+    dt = x.dtype
+    i = jax.nn.sigmoid(x @ p["w_input_gate"].astype(dt))
+    r = jax.nn.sigmoid(x @ p["w_a_gate"].astype(dt))
+    log_a = (-RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32))) * r.astype(
+        jnp.float32
+    )
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i.astype(jnp.float32) * x.astype(jnp.float32)
+    )
+    return a, b
+
+
+def rglru_scan(p, x, h0=None):
+    """Parallel linear recurrence over time.  x: (B,S,R); h0: (B,R) fp32."""
+    a, b = _rglru_coeffs(p, x)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p, x, h_prev):
+    """Single decode step.  x: (B,1,R); h_prev: (B,R) fp32."""
+    a, b = _rglru_coeffs(p, x)
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h.astype(x.dtype)[:, None], h
+
+
+def causal_conv1d(w, x):
+    """Per-channel causal conv.  w: (CW,R), x: (B,S,R)."""
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, k : k + x.shape[1]] * w[k].astype(x.dtype) for k in range(cw)
+    )
+    return out
+
+
+def conv1d_step(w, x, conv_state):
+    """x: (B,1,R); conv_state: (B,CW-1,R) of previous inputs."""
+    hist = jnp.concatenate([conv_state, x], axis=1)       # (B,CW,R)
+    out = jnp.einsum("bkr,kr->br", hist, w.astype(x.dtype))[:, None]
+    return out, hist[:, 1:]
+
+
+def apply_rec(p, x, cfg: ModelConfig, *, state=None):
+    """Recurrent module.  x: (B,S,D) -> (B,S,D); state carries (h, conv)."""
+    dt = x.dtype
+    s = x.shape[1]
+    y = jax.nn.gelu(x @ p["linear_y"].astype(dt))
+    xr = x @ p["linear_x"].astype(dt)
+    xr = constrain(xr, "dp", None, "tp")
+    if state is None:
+        xc = causal_conv1d(p["conv_w"], xr)
+        h, _ = rglru_scan(p, xc)
+        new_state = None
+    elif s == 1:
+        xc, conv_state = conv1d_step(p["conv_w"], xr, state["conv"])
+        h, h_raw = rglru_step(p, xc, state["h"])
+        new_state = {"h": h_raw, "conv": conv_state.astype(state["conv"].dtype)}
+    else:
+        # Prefill: scan the prompt from the carried state, emit final state.
+        cw = cfg.conv_width
+        hist = jnp.concatenate([state["conv"].astype(dt), xr], axis=1)
+        xc = causal_conv1d(p["conv_w"], hist)[:, cw - 1:]
+        h, h_final = rglru_scan(p, xc, h0=state["h"])
+        new_state = {
+            "h": h_final,
+            "conv": hist[:, -(cw - 1):].astype(state["conv"].dtype),
+        }
+    out = (h * y) @ p["linear_out"].astype(dt)
+    return constrain(out, "dp", None, None), new_state
+
+
+def init_rec_state(cfg: ModelConfig, batch: int):
+    return {
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), jnp.bfloat16),
+    }
+
+
+# -- blocks -------------------------------------------------------------------
+def init_griffin_block(key, cfg: ModelConfig, kind: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype), "ln2": jnp.ones((cfg.d_model,), dtype)}
+    if kind == "rec":
+        p["rec"] = init_rec(ks[0], cfg, dtype)
+    else:
+        p["attn"] = tr.init_attn(ks[0], cfg, dtype)
+    p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, True, dtype)
+    return p
+
+
+def apply_griffin_block(p, x, cfg: ModelConfig, kind: str, *, positions, cache=None):
+    h = rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
+    if kind == "rec":
+        out, new_cache = apply_rec(p["rec"], h, cfg, state=cache)
+    else:
+        out, new_cache = tr.apply_attn(
+            p["attn"], h, cfg, positions=positions, cache=cache,
+            window=cfg.local_window,
+        )
+    x = x + out
+    h = rms_norm(x, p["ln2"].astype(x.dtype), cfg.norm_eps)
+    x = x + apply_mlp(p["mlp"], h, gated=True)
+    return x, new_cache
+
+
+# -- model --------------------------------------------------------------------
+def _layer_kinds(cfg: ModelConfig) -> list[str]:
+    pat = cfg.block_pattern
+    return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+
+
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32):
+    pat = cfg.block_pattern
+    period = len(pat)
+    n_periods = cfg.num_layers // period
+    tail_kinds = _layer_kinds(cfg)[n_periods * period:]
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    periods = []
+    for i in range(n_periods):
+        slot = {}
+        for j, kind in enumerate(pat):
+            slot[f"s{j}_{kind}"] = init_griffin_block(
+                keys[i * period + j], cfg, kind, dtype
+            )
+        periods.append(slot)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *periods) if periods else {}
+    tail = [
+        init_griffin_block(keys[n_periods * period + j], cfg, kind, dtype)
+        for j, kind in enumerate(tail_kinds)
+    ]
+    return {
+        "embed": embed_init(keys[-1], (cfg.vocab_size, cfg.d_model), dtype),
+        "periods": stacked,
+        "tail": tail,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def _apply_period(slot_params, x, cfg, *, positions, caches=None):
+    new_caches = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        name = f"s{j}_{kind}"
+        c = caches.get(name) if caches else None
+        x, nc = apply_griffin_block(
+            slot_params[name], x, cfg, kind, positions=positions, cache=c
+        )
+        if caches is not None:
+            new_caches[name] = nc
+    return x, (new_caches if caches is not None else None)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, caches=None, positions=None):
+    dt = jnp.dtype(cfg.dtype)
+    x = constrain(params["embed"].astype(dt)[tokens], "dp", None, None)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+
+    period_fn = partial(_apply_period, cfg=cfg, positions=positions)
+    if cfg.remat:
+        period_fn = jax.checkpoint(period_fn, policy=remat_policy(cfg))
+
+    pc = caches["periods"] if caches is not None else None
+
+    def body(h, layer):
+        p_l, c_l = layer
+        h2, nc = period_fn(p_l, h, caches=c_l)
+        return h2, nc
+
+    if params["periods"]:
+        x, new_pc = jax.lax.scan(body, x, (params["periods"], pc))
+    else:
+        new_pc = pc
+    new_tail = []
+    tail_kinds = _layer_kinds(cfg)[len(_layer_kinds(cfg)) - len(params["tail"]):]
+    for j, (p_l, kind) in enumerate(zip(params["tail"], tail_kinds)):
+        c = caches["tail"][j] if caches is not None else None
+        x, nc = apply_griffin_block(p_l, x, cfg, kind, positions=positions, cache=c)
+        new_tail.append(nc)
+    x = rms_norm(x, params["ln_f"].astype(dt), cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(dt)  # tied embeddings
+    logits = constrain(logits, "dp", None, "tp")
+    new_caches = (
+        {"periods": new_pc, "tail": new_tail} if caches is not None else None
+    )
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, _ = forward(params, batch["tokens"], cfg)
+    return cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+def init_caches(cfg: ModelConfig, batch: int):
+    """Decode caches: ring-buffer KV for attn layers, (h, conv) for rec."""
+    pat = cfg.block_pattern
+    period = len(pat)
+    n_periods = cfg.num_layers // period
+    w = cfg.local_window
+    hd = cfg.resolved_head_dim
+
+    def one(kind):
+        if kind == "rec":
+            return init_rec_state(cfg, batch)
+        return {
+            "k": jnp.zeros((batch, w, cfg.num_kv_heads, hd), jnp.bfloat16),
+            "v": jnp.zeros((batch, w, cfg.num_kv_heads, hd), jnp.bfloat16),
+            "pos": jnp.full((batch, w), -1, jnp.int32),
+        }
+
+    slot = {f"s{j}_{k}": one(k) for j, k in enumerate(pat)}
+    periods = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape).copy(), slot
+    )
+    tail_kinds = _layer_kinds(cfg)[n_periods * period:]
+    tail = [one(k) for k in tail_kinds]
+    return {"periods": periods, "tail": tail}
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int):
+    """Prefill: one pass with caches active — recurrent states scan through
+    the prompt; window KV caches fill with the last ``window`` positions."""
+    b, _ = tokens.shape
+    caches = init_caches(cfg, b)
+    logits, caches = forward(params, tokens, cfg, caches=caches)
+    return constrain(logits[:, -1:], "dp", None, "tp"), caches
+
+
+def decode_step(params, caches, token, pos, cfg: ModelConfig):
+    positions = jnp.arange(1) + pos
+    logits, new_caches = forward(params, token[:, None], cfg, caches=caches,
+                                 positions=positions)
+    return logits, new_caches

@@ -1,0 +1,166 @@
+"""Uniform model API over all assigned architectures.
+
+``build_model(cfg)`` returns a ``ModelApi`` whose members are pure functions
+suitable for jit/lower: ``init``, ``loss_fn(params, batch)``,
+``prefill(params, batch)`` and ``decode_step(params, caches, token, pos)``.
+``*_spec`` members produce ShapeDtypeStruct stand-ins for every input of the
+given shape cell — the multi-pod dry-run lowers against these without
+allocating anything.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import recurrent, transformer, whisper, xlstm
+
+Params = Any
+SDS = jax.ShapeDtypeStruct
+
+
+def _tok(shape, dtype=jnp.int32):
+    return SDS(shape, dtype)
+
+
+@dataclass
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable            # (params, batch) -> scalar
+    prefill: Callable            # (params, batch) -> (logits, caches)
+    decode_step: Callable        # (params, caches, token, pos) -> (logits, caches)
+    batch_spec: Callable         # (ShapeConfig) -> batch pytree of SDS
+    decode_spec: Callable        # (ShapeConfig) -> (caches, token, pos) SDS
+
+    def param_spec(self, seed: int = 0):
+        return jax.eval_shape(lambda: self.init(jax.random.key(seed)))
+
+
+def _lm_batch_spec(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _tok((b, s)), "labels": _tok((b, s))}
+    if cfg.family == "vlm":
+        p = cfg.num_patches
+        batch = {
+            "tokens": _tok((b, s - p)),
+            "labels": _tok((b, s - p)),
+            "patches": SDS((b, p, cfg.d_model), jnp.bfloat16),
+        }
+    if cfg.family == "audio":
+        batch = {
+            "tokens": _tok((b, s)),
+            "labels": _tok((b, s)),
+            "frames": SDS((b, cfg.num_frames, cfg.d_model), jnp.bfloat16),
+        }
+    return batch
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    fam = cfg.family
+
+    pdt = jnp.dtype(cfg.param_dtype)
+
+    if fam in ("dense", "moe", "vlm"):
+        def init(key):
+            return transformer.init_lm(key, cfg, dtype=pdt)
+
+        def loss(params, batch):
+            return transformer.loss_fn(params, batch, cfg)
+
+        def pf(params, batch):
+            return transformer.prefill(
+                params, batch["tokens"], cfg, batch["tokens"].shape[1]
+                + (cfg.num_patches if fam == "vlm" else 0),
+                extra_embeds=batch.get("patches"),
+            )
+
+        def dec(params, caches, token, pos):
+            return transformer.decode_step(params, caches, token, pos, cfg)
+
+        def dspec(shape: ShapeConfig):
+            caches = jax.eval_shape(
+                lambda: transformer.init_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            return caches, _tok((shape.global_batch,)), SDS((), jnp.int32)
+
+    elif fam == "hybrid":
+        def init(key):
+            return recurrent.init_lm(key, cfg, dtype=pdt)
+
+        def loss(params, batch):
+            return recurrent.loss_fn(params, batch, cfg)
+
+        def pf(params, batch):
+            return recurrent.prefill(params, batch["tokens"], cfg,
+                                     batch["tokens"].shape[1])
+
+        def dec(params, caches, token, pos):
+            return recurrent.decode_step(params, caches, token, pos, cfg)
+
+        def dspec(shape: ShapeConfig):
+            caches = jax.eval_shape(
+                lambda: recurrent.init_caches(cfg, shape.global_batch)
+            )
+            return caches, _tok((shape.global_batch,)), SDS((), jnp.int32)
+
+    elif fam == "ssm":
+        def init(key):
+            return xlstm.init_lm(key, cfg, dtype=pdt)
+
+        def loss(params, batch):
+            return xlstm.loss_fn(params, batch, cfg)
+
+        def pf(params, batch):
+            return xlstm.prefill(params, batch["tokens"], cfg,
+                                 batch["tokens"].shape[1])
+
+        def dec(params, caches, token, pos):
+            return xlstm.decode_step(params, caches, token, pos, cfg)
+
+        def dspec(shape: ShapeConfig):
+            caches = jax.eval_shape(lambda: xlstm.init_caches(cfg, shape.global_batch))
+            return caches, _tok((shape.global_batch,)), SDS((), jnp.int32)
+
+    elif fam == "audio":
+        def init(key):
+            return whisper.init_model(key, cfg, dtype=pdt)
+
+        def loss(params, batch):
+            return whisper.loss_fn(params, batch, cfg)
+
+        def pf(params, batch):
+            return whisper.prefill(params, batch["frames"], batch["tokens"], cfg,
+                                   batch["tokens"].shape[1])
+
+        def dec(params, caches, token, pos):
+            return whisper.decode_step(params, caches, token, pos, cfg)
+
+        def dspec(shape: ShapeConfig):
+            b = shape.global_batch
+            kv = jax.eval_shape(lambda: whisper.init_caches(cfg, b, shape.seq_len))
+            mem = SDS((b, cfg.num_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+            caches = {"kv": kv, "memory": mem}
+            return caches, _tok((b,)), SDS((), jnp.int32)
+
+    else:  # pragma: no cover
+        raise ValueError(f"unknown family {fam}")
+
+    return ModelApi(
+        cfg=cfg,
+        init=init,
+        loss_fn=loss,
+        prefill=pf,
+        decode_step=dec,
+        batch_spec=lambda shape: _lm_batch_spec(cfg, shape),
+        decode_spec=dspec,
+    )
+
+
+def count_params(spec) -> int:
+    import math
+
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(spec))

@@ -1,0 +1,313 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbones).
+
+Functional-JAX: params are pytrees; layers are stacked along a leading axis
+and applied with ``jax.lax.scan`` (O(1) HLO size in depth) with optional
+rematerialization.  Serving path: prefill + single-token decode with a
+static KV cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_mod
+from repro.models.common import (
+    apply_mlp,
+    apply_rope,
+    attention,
+    constrain,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    init_mlp,
+    remat_policy,
+    rms_norm,
+)
+
+
+# -- per-layer ---------------------------------------------------------------
+def init_attn(key, cfg: ModelConfig, dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.num_heads * hd), 0, dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.num_kv_heads * hd), 0, dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.num_kv_heads * hd), 0, dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, cfg.d_model), 0, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    return p
+
+
+def _impl(cfg: ModelConfig, override: str | None) -> str:
+    if override:
+        return override
+    return "xla_flash" if cfg.attention_impl == "reference" else cfg.attention_impl
+
+
+def apply_attn(
+    p,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: dict | None = None,
+    window: int = 0,
+    impl: str | None = None,
+):
+    """Returns (out, new_cache).  x: (B,S,D)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+
+    def proj(w, bias, nh):
+        y = x @ p[w].astype(dt)
+        if bias in p:
+            y = y + p[bias].astype(dt)
+        return y.reshape(b, s, nh, hd)
+
+    q = proj("wq", "bq", cfg.num_heads)
+    k = proj("wk", "bk", cfg.num_kv_heads)
+    v = proj("wv", "bv", cfg.num_kv_heads)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        pos0 = positions[0] if positions.ndim == 1 else positions[0, 0]
+        if window > 0:
+            if s == 1:
+                # Ring-buffer single-token decode step.
+                slot = pos0 % window
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+                cp = jax.lax.dynamic_update_slice(
+                    cache["pos"],
+                    jnp.broadcast_to(positions[None, :], (b, 1)).astype(
+                        cache["pos"].dtype),
+                    (0, slot))
+                new_cache = {"k": ck, "v": cv, "pos": cp}
+                out = _window_cache_attention(
+                    q, ck.astype(dt), cv.astype(dt), cp, pos0, window)
+            else:
+                # Prefill: windowed attention over the prompt, then fill the
+                # ring buffer with the last min(S, window) keys/values.
+                out = attention(q, k, v, impl=_impl(cfg, impl), causal=True,
+                                window=window, q_offset=pos0)
+                wlen = min(s, window)
+                slots = (positions[-wlen:]) % window
+                ck = cache["k"].at[:, slots].set(k[:, -wlen:].astype(cache["k"].dtype))
+                cv = cache["v"].at[:, slots].set(v[:, -wlen:].astype(cache["v"].dtype))
+                cp = cache["pos"].at[:, slots].set(
+                    jnp.broadcast_to(positions[-wlen:][None, :], (b, wlen)).astype(
+                        cache["pos"].dtype))
+                new_cache = {"k": ck, "v": cv, "pos": cp}
+            out = out.reshape(b, s, cfg.num_heads * hd)
+            out = out @ p["wo"].astype(dt)
+            return constrain(out, "dp", "sp", None), new_cache
+        if cfg.kv_quant:
+            # int8 KV cache with per-(token, head) max-abs bf16 scales.
+            kq, ks = _kv_quantize(k)
+            vq, vs = _kv_quantize(v)
+            ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos0, 0, 0))
+            cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                               (0, pos0, 0))
+            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                               (0, pos0, 0))
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            k = ck.astype(dt) * cks.astype(dt)[..., None]
+            v = cv.astype(dt) * cvs.astype(dt)[..., None]
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos0, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck.astype(dt), cv.astype(dt)
+        q_offset = pos0
+    else:
+        q_offset = positions[0] if positions.ndim == 1 else 0
+
+    out = attention(
+        q, k, v, impl=_impl(cfg, impl), causal=True, window=window,
+        q_offset=q_offset,
+    )
+    out = out.reshape(b, s, cfg.num_heads * hd)
+    out = out @ p["wo"].astype(dt)
+    return constrain(out, "dp", "sp", None), new_cache
+
+
+def _window_cache_attention(q, k, v, kpos, cur_pos, window):
+    """Attention over a ring-buffer cache with absolute-position masking."""
+    import math
+
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    if h != kvh:
+        from repro.models.common import _repeat_kv
+
+        k = _repeat_kv(k, h // kvh)
+        v = _repeat_kv(v, h // kvh)
+    sc = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) / math.sqrt(hd)
+    valid = (kpos[:, None, None, :] <= cur_pos) & (
+        kpos[:, None, None, :] > cur_pos - window
+    )
+    sc = jnp.where(valid, sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", pr, v)
+
+
+def init_block(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attn(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype)
+    return p
+
+
+def apply_block(p, x, cfg: ModelConfig, *, positions, cache=None):
+    h, new_cache = apply_attn(
+        p["attn"], rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps), cfg,
+        positions=positions, cache=cache,
+    )
+    x = x + h
+    h = rms_norm(x, p["ln2"].astype(x.dtype), cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + moe_mod.apply_moe(p["moe"], h, cfg)
+    else:
+        x = x + apply_mlp(p["mlp"], h, gated=cfg.gated_mlp)
+    return x, new_cache
+
+
+# -- model -------------------------------------------------------------------
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, cfg.num_layers + 3)
+    blocks = [init_block(ks[i], cfg, dtype) for i in range(cfg.num_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    p = {
+        "embed": embed_init(ks[-1], (cfg.vocab_size, cfg.d_model), dtype),
+        "blocks": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[-2], (cfg.d_model, cfg.vocab_size), 0, dtype)
+    return p
+
+
+def _scan_blocks(params, x, cfg: ModelConfig, *, positions, caches=None):
+    block = partial(apply_block, cfg=cfg, positions=positions)
+    if cfg.remat:
+        block = jax.checkpoint(block, policy=remat_policy(cfg))
+
+    if caches is None:
+        def body(h, p_l):
+            h2, _ = block(p_l, h)
+            return h2, None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return x, None
+
+    def body(h, layer):
+        p_l, cache_l = layer
+        h2, new_cache = block(p_l, h, cache=cache_l)
+        return h2, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    return x, new_caches
+
+
+def _embed(params, tokens, cfg, dt):
+    x = params["embed"].astype(dt)[tokens]
+    return constrain(x, "dp", "sp", None)
+
+
+def _logits(params, x, cfg: ModelConfig):
+    x = rms_norm(x, params["ln_f"].astype(x.dtype), cfg.norm_eps)
+    head = params.get("lm_head", None)
+    w = head if head is not None else params["embed"].T
+    logits = x @ w.astype(x.dtype)
+    return constrain(logits, "dp", "sp", "tp")
+
+
+def forward(params, tokens, cfg: ModelConfig, *, extra_embeds=None):
+    """tokens (B,S) -> logits (B,S',V).  ``extra_embeds`` (B,P,D) prepended
+    (VLM patches); logits returned for the token positions only."""
+    dt = jnp.dtype(cfg.dtype)
+    x = _embed(params, tokens, cfg, dt)
+    n_extra = 0
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(dt), x], axis=1)
+        n_extra = extra_embeds.shape[1]
+    positions = jnp.arange(x.shape[1])
+    x, _ = _scan_blocks(params, x, cfg, positions=positions)
+    if n_extra:
+        x = x[:, n_extra:]
+    return _logits(params, x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg,
+                     extra_embeds=batch.get("patches"))
+    return cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# -- serving ------------------------------------------------------------------
+def _kv_quantize(x):
+    """(B,S,KV,hd) -> (int8 values, bf16 per-(B,S,KV) scales)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd)
+    if cfg.kv_quant:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1], jnp.bfloat16),
+            "v_scale": jnp.zeros(shape[:-1], jnp.bfloat16),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int, *, extra_embeds=None):
+    """Run the prompt, fill the cache; returns (last_logits, cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = _embed(params, tokens, cfg, dt)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(dt), x], axis=1)
+    b, s, _ = x.shape
+    caches = init_cache(cfg, b, max_len)
+    positions = jnp.arange(s)
+    x, new_caches = _scan_blocks(params, x, cfg, positions=positions, caches=caches)
+    logits = _logits(params, x[:, -1:], cfg)
+    return logits, new_caches
+
+
+def decode_step(params, caches, token, pos, cfg: ModelConfig):
+    """One decode step.  token (B,) int32, pos scalar int32."""
+    dt = jnp.dtype(cfg.dtype)
+    x = _embed(params, token[:, None], cfg, dt)
+    positions = jnp.arange(1) + pos
+    x, new_caches = _scan_blocks(params, x, cfg, positions=positions, caches=caches)
+    return _logits(params, x, cfg), new_caches

@@ -1,0 +1,201 @@
+"""Whisper-style encoder-decoder transformer (audio backbone).
+
+The conv/mel frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings (B, num_frames, d_model).  Sinusoidal position
+encodings; MHA; decoder has causal self-attention (KV cache) + cross
+attention to the encoder memory.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    apply_mlp,
+    attention,
+    constrain,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    init_mlp,
+    remat_policy,
+    rms_norm,
+    sinusoidal_positions,
+)
+
+
+def _init_proj(key, cfg, dtype):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.num_heads * hd), 0, dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.num_kv_heads * hd), 0, dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.num_kv_heads * hd), 0, dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, cfg.d_model), 0, dtype),
+    }
+
+
+def _proj_qkv(p, xq, xkv, cfg):
+    b, s, _ = xq.shape
+    t = xkv.shape[1]
+    hd = cfg.resolved_head_dim
+    dt = xq.dtype
+    q = (xq @ p["wq"].astype(dt)).reshape(b, s, cfg.num_heads, hd)
+    k = (xkv @ p["wk"].astype(dt)).reshape(b, t, cfg.num_kv_heads, hd)
+    v = (xkv @ p["wv"].astype(dt)).reshape(b, t, cfg.num_kv_heads, hd)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    return q, k, v
+
+
+def init_enc_block(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": _init_proj(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, False, dtype),
+    }
+
+
+def apply_enc_block(p, x, cfg):
+    h = rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
+    q, k, v = _proj_qkv(p["attn"], h, h, cfg)
+    o = attention(q, k, v, impl="xla_flash", causal=False)
+    o = o.reshape(x.shape) if o.ndim == 3 else o.reshape(x.shape[0], x.shape[1], -1)
+    x = x + constrain(o @ p["attn"]["wo"].astype(x.dtype), "dp", "sp", None)
+    h = rms_norm(x, p["ln2"].astype(x.dtype), cfg.norm_eps)
+    return x + apply_mlp(p["mlp"], h, gated=False)
+
+
+def init_dec_block(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "self_attn": _init_proj(ks[0], cfg, dtype),
+        "ln_x": jnp.ones((cfg.d_model,), dtype),
+        "cross_attn": _init_proj(ks[1], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, False, dtype),
+    }
+
+
+def apply_dec_block(p, x, cfg, *, memory, positions, cache=None):
+    b, s, _ = x.shape
+    dt = x.dtype
+    # self attention (causal, cached)
+    h = rms_norm(x, p["ln1"].astype(dt), cfg.norm_eps)
+    q, k, v = _proj_qkv(p["self_attn"], h, h, cfg)
+    new_cache = None
+    if cache is not None:
+        pos0 = positions[0]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, pos0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, pos0, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck.astype(dt), cv.astype(dt)
+        o = attention(q, k, v, impl="xla_flash", causal=True, q_offset=pos0)
+    else:
+        o = attention(q, k, v, impl="xla_flash", causal=True)
+    x = x + constrain(o.reshape(b, s, -1) @ p["self_attn"]["wo"].astype(dt),
+                      "dp", "sp", None)
+    # cross attention to encoder memory
+    h = rms_norm(x, p["ln_x"].astype(dt), cfg.norm_eps)
+    q, k, v = _proj_qkv(p["cross_attn"], h, memory, cfg)
+    o = attention(q, k, v, impl="xla_flash", causal=False)
+    x = x + constrain(o.reshape(b, s, -1) @ p["cross_attn"]["wo"].astype(dt),
+                      "dp", "sp", None)
+    h = rms_norm(x, p["ln2"].astype(dt), cfg.norm_eps)
+    return x + apply_mlp(p["mlp"], h, gated=False), new_cache
+
+
+def init_model(key, cfg: ModelConfig, dtype=jnp.float32):
+    n_enc, n_dec = cfg.encoder_layers, cfg.num_layers
+    keys = jax.random.split(key, n_enc + n_dec + 3)
+    enc = [init_enc_block(keys[i], cfg, dtype) for i in range(n_enc)]
+    dec = [init_dec_block(keys[n_enc + i], cfg, dtype) for i in range(n_dec)]
+    return {
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "embed": embed_init(keys[-1], (cfg.vocab_size, cfg.d_model), dtype),
+        "ln_enc": jnp.ones((cfg.d_model,), dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), 0, dtype),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, F, D) precomputed frame embeddings (stub frontend)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = frames.astype(dt) + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(dt)
+    x = constrain(x, "dp", "sp", None)
+    block = partial(apply_enc_block, cfg=cfg)
+    if cfg.remat:
+        block = jax.checkpoint(block, policy=remat_policy(cfg))
+
+    def body(h, p_l):
+        return block(p_l, h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["ln_enc"].astype(dt), cfg.norm_eps)
+
+
+def decode(params, memory, tokens, cfg: ModelConfig, *, positions=None, caches=None):
+    dt = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    pe = sinusoidal_positions(s, cfg.d_model, offset=0).astype(dt)
+    x = params["embed"].astype(dt)[tokens]
+    if caches is None:
+        x = x + pe
+    else:
+        x = x + jnp.take(
+            sinusoidal_positions(65536, cfg.d_model).astype(dt), positions, axis=0
+        )
+    x = constrain(x, "dp", "sp", None)
+    block = partial(apply_dec_block, cfg=cfg, memory=memory, positions=positions)
+    if cfg.remat:
+        block = jax.checkpoint(block, policy=remat_policy(cfg))
+
+    def body(h, layer):
+        p_l, c_l = layer
+        h2, nc = block(p_l, h, cache=c_l)
+        return h2, nc
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], caches))
+    x = rms_norm(x, params["ln_f"].astype(dt), cfg.norm_eps)
+    logits = constrain(x @ params["lm_head"].astype(dt), "dp", "sp", "tp")
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    memory = encode(params, batch["frames"], cfg)
+    logits, _ = decode(params, memory, batch["tokens"], cfg)
+    return cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, jnp.bfloat16), "v": jnp.zeros(shape, jnp.bfloat16)}
+
+
+def prefill(params, frames, tokens, cfg: ModelConfig, max_len: int):
+    memory = encode(params, frames, cfg)
+    caches = init_caches(cfg, tokens.shape[0], max_len)
+    logits, caches = decode(params, memory, tokens, cfg,
+                            positions=jnp.arange(tokens.shape[1]), caches=caches)
+    return logits[:, -1:], {"kv": caches, "memory": memory}
+
+
+def decode_step(params, state, token, pos, cfg: ModelConfig):
+    positions = jnp.arange(1) + pos
+    logits, kv = decode(params, state["memory"], token[:, None], cfg,
+                        positions=positions, caches=state["kv"])
+    return logits, {"kv": kv, "memory": state["memory"]}

@@ -1,0 +1,337 @@
+"""xLSTM: mLSTM (matrix-memory) + sLSTM blocks, xLSTM[7:1] layout.
+
+mLSTM uses the chunkwise-parallel linear-recurrence form: within a chunk an
+attention-like quadratic (L_c x L_c) with multiplicative gate decays; across
+chunks a carried matrix state C (NH, dh, dh) and normalizer n (NH, dh):
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+
+Simplification vs the paper (documented in DESIGN.md): sigmoid input/forget
+gates instead of exponential gates with max-stabilizer — state shapes,
+recurrence structure, chunkwise algorithm and FLOPs are preserved.
+sLSTM is a per-head recurrent cell scanned over time (O(1) decode state).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    constrain,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    remat_policy,
+    rms_norm,
+)
+from repro.models.recurrent import causal_conv1d, conv1d_step
+
+CHUNK = 256
+
+
+def _dims(cfg: ModelConfig):
+    di = int(cfg.proj_factor * cfg.d_model)
+    nh = cfg.num_heads
+    return di, nh, di // nh
+
+
+# -- mLSTM --------------------------------------------------------------------
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di, nh, dh = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_up": dense_init(ks[0], (d, 2 * di), 0, dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, di), 0, dtype),
+        "wq": dense_init(ks[2], (nh, dh, dh), 1, dtype),
+        "wk": dense_init(ks[3], (nh, dh, dh), 1, dtype),
+        "wv": dense_init(ks[4], (nh, dh, dh), 1, dtype),
+        "w_i": dense_init(ks[5], (di, nh), 0, dtype),
+        "w_f": dense_init(ks[6], (di, nh), 0, dtype),
+        "f_bias": jnp.full((nh,), 3.0, dtype),
+        "gn": jnp.ones((di,), dtype),
+        "w_down": dense_init(ks[7], (di, d), 0, dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, i, logf, C0, n0):
+    """Chunkwise mLSTM.  q,k,v: (B,S,NH,dh); i,logf: (B,S,NH).
+    C0: (B,NH,dh,dh), n0: (B,NH,dh).  Returns (h (B,S,NH,dh), C, n)."""
+    b, s, nh, dh = q.shape
+    L = min(CHUNK, s)
+    nc = -(-s // L)
+    pad = nc * L - s
+    if pad:
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v, i, logf = map(zf, (q, k, v, i, logf))
+
+    def split(x):  # (B, NC*L, ...) -> (NC, B, L, ...)
+        return x.reshape(b, nc, L, *x.shape[2:]).transpose(1, 0, 2, *range(3, x.ndim + 1))
+
+    qs, ks_, vs, is_, lfs = map(split, (q, k, v, i, logf))
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(carry, xs):
+        C, n = carry
+        qc, kc, vc, ic, lfc = xs             # (B,L,NH,*)
+        cl = jnp.cumsum(lfc, axis=1)          # (B,L,NH) log cumulative decay
+        qk = jnp.einsum("blhd,bmhd->bhlm", qc, kc).astype(jnp.float32)
+        decay = jnp.exp(cl.transpose(0, 2, 1)[:, :, :, None]
+                        - cl.transpose(0, 2, 1)[:, :, None, :])
+        A = qk * decay * ic.transpose(0, 2, 1)[:, :, None, :].astype(jnp.float32)
+        A = jnp.where(mask[None, None], A, 0.0)
+        h_intra = jnp.einsum("bhlm,bmhd->blhd", A.astype(qc.dtype), vc)
+        d_intra = A.sum(-1).transpose(0, 2, 1)                     # (B,L,NH)
+        ecl = jnp.exp(cl)                                          # (B,L,NH)
+        h_inter = jnp.einsum("blhd,bhde->blhe", qc, C.astype(qc.dtype)) * \
+            ecl[..., None].astype(qc.dtype)
+        d_inter = jnp.einsum("blhd,bhd->blh", qc.astype(jnp.float32),
+                             n) * ecl
+        denom = jnp.maximum(jnp.abs(d_intra + d_inter), 1.0)
+        h = (h_intra.astype(jnp.float32) + h_inter.astype(jnp.float32)) / \
+            denom[..., None]
+        e_end = jnp.exp(cl[:, -1])                                 # (B,NH)
+        w_end = jnp.exp(cl[:, -1][:, None] - cl) * ic.astype(jnp.float32)
+        C = e_end[:, :, None, None] * C + jnp.einsum(
+            "blh,blhd,blhe->bhde", w_end, kc.astype(jnp.float32),
+            vc.astype(jnp.float32))
+        n = e_end[:, :, None] * n + jnp.einsum(
+            "blh,blhd->bhd", w_end, kc.astype(jnp.float32))
+        return (C, n), h.astype(qc.dtype)
+
+    (C, n), hs = jax.lax.scan(body, (C0, n0), (qs, ks_, vs, is_, lfs))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, nc * L, nh, dh)
+    return h[:, :s], C, n
+
+
+def apply_mlstm(p, x, cfg: ModelConfig, *, state=None):
+    dt = x.dtype
+    b, s, d = x.shape
+    di, nh, dh = _dims(cfg)
+    h0 = rms_norm(x, p["ln"].astype(dt), cfg.norm_eps)
+    up = h0 @ p["w_up"].astype(dt)
+    up = constrain(up, "dp", None, "tp")
+    xm, z = jnp.split(up, 2, axis=-1)
+
+    new_conv = None
+    if state is None:
+        xc = jax.nn.silu(causal_conv1d(p["conv_w"], xm))
+    elif s == 1:
+        c_out, conv_state = conv1d_step(p["conv_w"], xm, state["conv"].astype(dt))
+        xc = jax.nn.silu(c_out)
+        new_conv = conv_state
+    else:  # prefill from carried conv state
+        cw = cfg.conv_width
+        hist = jnp.concatenate([state["conv"].astype(dt), xm], axis=1)
+        xc = jax.nn.silu(causal_conv1d(p["conv_w"], hist)[:, cw - 1:])
+        new_conv = hist[:, -(cw - 1):]
+
+    def headwise(w, src):
+        hsrc = src.reshape(b, s, nh, dh)
+        return jnp.einsum("blhd,hde->blhe", hsrc, w.astype(dt))
+
+    q = headwise(p["wq"], xc)
+    k = headwise(p["wk"], xc) / jnp.sqrt(jnp.float32(dh)).astype(dt)
+    v = headwise(p["wv"], xm)
+    gate_i = jax.nn.sigmoid((xm @ p["w_i"].astype(dt)).astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(
+        (xm @ p["w_f"].astype(dt)).astype(jnp.float32) + p["f_bias"].astype(jnp.float32)
+    )
+
+    if state is None:
+        C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+    else:
+        C0, n0 = state["C"], state["n"]
+
+    if s == 1 and state is not None:
+        f = jnp.exp(logf[:, 0])                                   # (B,NH)
+        C = f[:, :, None, None] * C0 + gate_i[:, 0][:, :, None, None] * jnp.einsum(
+            "bhd,bhe->bhde", k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32))
+        n = f[:, :, None] * n0 + gate_i[:, 0][:, :, None] * k[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhd,bhde->bhe", q[:, 0].astype(jnp.float32), C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh",
+                                             q[:, 0].astype(jnp.float32), n)), 1.0)
+        h = (num / den[..., None]).astype(dt)[:, None]
+    else:
+        h, C, n = _mlstm_chunk_scan(q, k, v, gate_i, logf, C0, n0)
+
+    h = rms_norm(h.reshape(b, s, di), p["gn"].astype(dt), cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ p["w_down"].astype(dt)
+    out = constrain(out, "dp", None, None)
+    new_state = None
+    if state is not None:
+        new_state = {"C": C, "n": n, "conv": new_conv.astype(state["conv"].dtype)}
+    return x + out, new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    di, nh, dh = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), jnp.bfloat16),
+    }
+
+
+# -- sLSTM --------------------------------------------------------------------
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_gates": dense_init(ks[0], (d, 4 * d), 0, dtype),
+        "r_gates": dense_init(ks[1], (nh, dh, 4 * dh), 1, dtype),
+        "gn": jnp.ones((d,), dtype),
+        "w_out": dense_init(ks[2], (d, d), 0, dtype),
+    }
+
+
+def _slstm_cell(gx, h_prev, c_prev, r_gates, nh, dh):
+    """gx: (B,4D) precomputed input gates; h/c: (B,D)."""
+    b = gx.shape[0]
+    hr = h_prev.reshape(b, nh, dh)
+    gr = jnp.einsum("bhd,hde->bhe", hr, r_gates.astype(h_prev.dtype))
+    g = gx + gr.reshape(b, -1)
+    i, f, z, o = jnp.split(g, 4, axis=-1)
+    c = jax.nn.sigmoid(f) * c_prev + jax.nn.sigmoid(i) * jnp.tanh(z)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def apply_slstm(p, x, cfg: ModelConfig, *, state=None):
+    dt = x.dtype
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    dh = d // nh
+    xn = rms_norm(x, p["ln"].astype(dt), cfg.norm_eps)
+    gx = xn @ p["w_gates"].astype(dt)                              # (B,S,4D)
+    gx = constrain(gx, "dp", None, "tp")
+    if state is None:
+        h0 = jnp.zeros((b, d), dt)
+        c0 = jnp.zeros((b, d), jnp.float32)
+    else:
+        h0, c0 = state["h"].astype(dt), state["c"]
+
+    def step(carry, g_t):
+        h, c = carry
+        h2, c2 = _slstm_cell(g_t, h, c.astype(jnp.float32), p["r_gates"], nh, dh)
+        return (h2.astype(dt), c2), h2.astype(dt)
+
+    (hf, cf), hs = jax.lax.scan(step, (h0, c0), gx.transpose(1, 0, 2))
+    hseq = hs.transpose(1, 0, 2)
+    out = rms_norm(hseq, p["gn"].astype(dt), cfg.norm_eps) @ p["w_out"].astype(dt)
+    out = constrain(out, "dp", None, None)
+    new_state = {"h": hf, "c": cf} if state is not None else None
+    return x + out, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    return {
+        "h": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+        "c": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }
+
+
+# -- model ----------------------------------------------------------------------
+def _period(cfg: ModelConfig) -> int:
+    return cfg.slstm_every
+
+
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32):
+    per = _period(cfg)
+    n_periods = cfg.num_layers // per
+    n_m = per - 1
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    periods = []
+    ki = 0
+    for _ in range(n_periods):
+        mls = [init_mlstm(keys[ki + j], cfg, dtype) for j in range(n_m)]
+        ki += n_m
+        sl = init_slstm(keys[ki], cfg, dtype)
+        ki += 1
+        periods.append({
+            "mlstm": jax.tree.map(lambda *xs: jnp.stack(xs), *mls),
+            "slstm": sl,
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *periods)
+    return {
+        "embed": embed_init(keys[-1], (cfg.vocab_size, cfg.d_model), dtype),
+        "periods": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), 0, dtype),
+    }
+
+
+def _apply_period(p_slot, x, cfg, *, caches=None):
+    mc = caches["mlstm"] if caches is not None else None
+
+    def mbody(h, layer):
+        p_l, c_l = layer
+        h2, nc = apply_mlstm(p_l, h, cfg, state=c_l)
+        return h2, nc
+
+    x, new_mc = jax.lax.scan(mbody, x, (p_slot["mlstm"], mc))
+    sc = caches["slstm"] if caches is not None else None
+    x, new_sc = apply_slstm(p_slot["slstm"], x, cfg, state=sc)
+    new = {"mlstm": new_mc, "slstm": new_sc} if caches is not None else None
+    return x, new
+
+
+def forward(params, tokens, cfg: ModelConfig, *, caches=None):
+    dt = jnp.dtype(cfg.dtype)
+    x = constrain(params["embed"].astype(dt)[tokens], "dp", None, None)
+    period_fn = partial(_apply_period, cfg=cfg)
+    if cfg.remat:
+        period_fn = jax.checkpoint(period_fn, policy=remat_policy(cfg))
+    pc = caches if caches is not None else None
+
+    def body(h, layer):
+        p_l, c_l = layer
+        h2, nc = period_fn(p_l, h, caches=c_l)
+        return h2, nc
+
+    x, new_caches = jax.lax.scan(body, x, (params["periods"], pc))
+    x = rms_norm(x, params["ln_f"].astype(dt), cfg.norm_eps)
+    logits = constrain(x @ params["lm_head"].astype(dt), "dp", None, "tp")
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, _ = forward(params, batch["tokens"], cfg)
+    return cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+def init_caches(cfg: ModelConfig, batch: int):
+    per = _period(cfg)
+    n_periods = cfg.num_layers // per
+    n_m = per - 1
+    slot = {
+        "mlstm": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_m,) + x.shape).copy(),
+            init_mlstm_state(cfg, batch),
+        ),
+        "slstm": init_slstm_state(cfg, batch),
+    }
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape).copy(), slot
+    )
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int):
+    caches = init_caches(cfg, tokens.shape[0])
+    logits, caches = forward(params, tokens, cfg, caches=caches)
+    return logits[:, -1:], caches
+
+
+def decode_step(params, caches, token, pos, cfg: ModelConfig):
+    logits, new_caches = forward(params, token[:, None], cfg, caches=caches)
+    return logits, new_caches

@@ -1,0 +1,8 @@
+from repro.sharding.specs import (  # noqa: F401
+    batch_pspec,
+    cache_pspec,
+    opt_state_pspec,
+    param_pspec,
+    param_shardings,
+    tree_shardings,
+)

@@ -1,0 +1,155 @@
+"""GSPMD partition rules: parameters, optimizer states, batches, caches.
+
+Rules are name+rank based and *divisibility-safe*: an axis is only assigned
+if the dim is divisible by the mesh-axis size (GSPMD could pad, but we keep
+layouts exact so memory analysis is truthful).  Policy:
+
+  * TP ("model"): last dim of input projections (wq/wk/wv/wi/wg/up/gates),
+    first weight dim of output projections (wo/down/out); vocab dim of the
+    embedding; expert dim of MoE expert stacks (expert parallelism).
+  * FSDP ("data", optional): the complementary weight dim — XLA inserts
+    just-in-time all-gathers (ZeRO-3-style storage sharding).
+  * Optimizer states inherit the param spec; with ``zero >= 1`` an extra
+    "data" axis is added to the largest unsharded dim (ZeRO-1).
+  * Batches shard (pod, data) over the batch dim; KV caches shard batch +
+    heads (or head_dim when head count is indivisible, e.g. MQA).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+IN_PROJ = re.compile(
+    r"(wq|wk|wv|wi|wg|w_up|linear_x|linear_y|w_gates|router|w_i|w_f|r_gates)$"
+)
+OUT_PROJ = re.compile(r"(wo|w_down|linear_out|w_out)$")
+BIAS = re.compile(r"(bq|bk|bv)$")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    sizes = [axis] if isinstance(axis, str) else list(axis)
+    need = math.prod(_axis_size(mesh, a) for a in sizes)
+    return dim % need == 0 and dim >= need
+
+
+def _spec(shape, mesh, assign: dict[int, Any]) -> P:
+    """assign: dim index (negative ok) -> axis name; divisibility-checked."""
+    out = [None] * len(shape)
+    for di, ax in assign.items():
+        i = di % len(shape)
+        if _fits(shape[i], mesh, ax):
+            out[i] = ax
+    return P(*out)
+
+
+def param_pspec(path_str: str, shape: tuple[int, ...], mesh: Mesh,
+                parallel: ParallelConfig) -> P:
+    fsdp = "data" if parallel.fsdp else None
+    name = path_str.rsplit("/", 1)[-1]
+    rank = len(shape)
+
+    if name == "embed":
+        return _spec(shape, mesh, {0: "model", 1: fsdp})
+    if name == "lm_head":
+        return _spec(shape, mesh, {0: fsdp, 1: "model"})
+    if "moe" in path_str and name in ("wi", "wg") and rank >= 3:
+        # (..., E, D, F): expert parallelism + FSDP on d_model
+        return _spec(shape, mesh, {-3: "model", -2: fsdp})
+    if "moe" in path_str and name == "wo" and rank >= 3:
+        return _spec(shape, mesh, {-3: "model", -1: fsdp})
+    if BIAS.match(name):
+        return _spec(shape, mesh, {-1: "model"})
+    if IN_PROJ.search(name) and rank >= 2:
+        return _spec(shape, mesh, {-1: "model", -2: fsdp})
+    if OUT_PROJ.search(name) and rank >= 2:
+        return _spec(shape, mesh, {-2: "model", -1: fsdp})
+    return P(*([None] * rank))
+
+
+def param_shardings(param_spec_tree, mesh: Mesh, parallel: ParallelConfig):
+    """Tree of NamedSharding matching a tree of ShapeDtypeStructs."""
+
+    def rule(path, leaf):
+        ps = param_pspec(_path_str(path), leaf.shape, mesh, parallel)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree_util.tree_map_with_path(rule, param_spec_tree)
+
+
+def opt_state_pspec(pspec: P, shape, mesh: Mesh, parallel: ParallelConfig) -> P:
+    """ZeRO-1: add a "data" axis to the largest unsharded dim if possible."""
+    if parallel.zero < 1 or parallel.fsdp:
+        return pspec  # fsdp already shards over data
+    used = set()
+    for e in pspec:
+        if e is None:
+            continue
+        used.update([e] if isinstance(e, str) else list(e))
+    if "data" in used:
+        return pspec
+    dims = list(pspec) + [None] * (len(shape) - len(pspec))
+    # largest unsharded, divisible dim
+    cands = [i for i in range(len(shape))
+             if dims[i] is None and _fits(shape[i], mesh, "data")]
+    if not cands:
+        return pspec
+    i = max(cands, key=lambda j: shape[j])
+    dims[i] = "data"
+    return P(*dims)
+
+
+def batch_pspec(shape: tuple[int, ...], mesh: Mesh, global_batch: int) -> P:
+    dp = tuple(a for a in ("pod", "data") if _axis_size(mesh, a) > 1)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    out = [None] * len(shape)
+    for i, d in enumerate(shape):
+        if d == global_batch and _fits(d, mesh, dp) and dp is not None:
+            out[i] = dp
+            break
+    return P(*out)
+
+
+def cache_pspec(path_str: str, shape, mesh: Mesh, global_batch: int) -> P:
+    """KV caches / recurrent states: batch over dp, heads/hd over model."""
+    spec = list(batch_pspec(shape, mesh, global_batch))
+    name = path_str.rsplit("/", 1)[-1]
+    if name in ("k", "v") and len(shape) >= 4:
+        # (..., T, KV, hd)
+        if _fits(shape[-2], mesh, "model") and shape[-2] > 1:
+            spec[-2] = "model"
+        elif _fits(shape[-1], mesh, "model"):
+            spec[-1] = "model"
+    elif name in ("C", "n", "h", "conv", "memory") and len(shape) >= 2:
+        if spec[-1] is None and _fits(shape[-1], mesh, "model") and shape[-1] >= 64:
+            spec[-1] = "model"
+    return P(*spec)
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rule):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, rule(_path_str(path), leaf.shape)),
+        spec_tree,
+    )

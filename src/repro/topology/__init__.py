@@ -1,0 +1,35 @@
+from .algorithms import (
+    ALGO_BY_KIND,
+    DIRECT,
+    HALVING_DOUBLING,
+    RING,
+    CollectiveAlgorithm,
+    Phase,
+    TopoKind,
+)
+from .topology import (
+    ALL_TOPOLOGIES,
+    GBPS,
+    NetworkDim,
+    Topology,
+    make_current_topology,
+    make_table2_topologies,
+    make_tpu_pod_topology,
+)
+
+__all__ = [
+    "ALGO_BY_KIND",
+    "ALL_TOPOLOGIES",
+    "GBPS",
+    "CollectiveAlgorithm",
+    "DIRECT",
+    "HALVING_DOUBLING",
+    "NetworkDim",
+    "Phase",
+    "RING",
+    "TopoKind",
+    "Topology",
+    "make_current_topology",
+    "make_table2_topologies",
+    "make_tpu_pod_topology",
+]

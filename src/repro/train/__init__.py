@@ -1,0 +1,7 @@
+from repro.train.optimizer import adamw_init, adamw_update, lr_schedule  # noqa: F401
+from repro.train.step import (  # noqa: F401
+    gspmd_init_state,
+    make_gspmd_train_step,
+    make_themis_train_step,
+    make_train_step,
+)

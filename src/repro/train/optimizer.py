@@ -1,0 +1,84 @@
+"""AdamW in pure JAX, with LR schedule and global-norm clipping.
+
+Works on arbitrary pytrees *or* on flat ZeRO-sharded buffers (the manual
+Themis path keeps m/v in the reduce-scattered layout).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    import copy
+
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def adamw_update(
+    grads: Any, state: dict, params: Any, cfg: TrainConfig
+) -> tuple[Any, dict, jax.Array]:
+    """Returns (new_params, new_state, lr)."""
+    count = state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m2 / c1
+        vhat = v2 / c2
+        step = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_p = jax.tree.leaves(params)
+    treedef = jax.tree.structure(params)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        p2, m2, v2 = upd(g, m, v, p)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {
+            "m": jax.tree.unflatten(treedef, new_m),
+            "v": jax.tree.unflatten(treedef, new_v),
+            "count": count,
+        },
+        lr,
+    )

@@ -1,0 +1,46 @@
+"""Serving-step builders: jit'd prefill + decode with GSPMD shardings."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ParallelConfig, ShapeConfig
+from repro.models.common import mesh_context
+from repro.models.registry import ModelApi
+from repro.sharding.specs import batch_pspec, cache_pspec, param_shardings, tree_shardings
+
+
+def make_serve_fns(api: ModelApi, mesh: Mesh, parallel: ParallelConfig,
+                   shape: ShapeConfig):
+    """Returns (jit_prefill, jit_decode, shardings dict)."""
+    p_shard = param_shardings(api.param_spec(), mesh, parallel)
+    gb = shape.global_batch
+
+    caches_spec, token_spec, pos_spec = api.decode_spec(shape)
+    cache_shard = tree_shardings(
+        caches_spec, mesh, lambda path, s: cache_pspec(path, s, mesh, gb)
+    )
+    token_shard = NamedSharding(mesh, batch_pspec(token_spec.shape, mesh, gb))
+
+    def prefill(params, batch):
+        with mesh_context(mesh):
+            return api.prefill(params, batch)
+
+    def decode(params, caches, token, pos):
+        with mesh_context(mesh):
+            return api.decode_step(params, caches, token, pos)
+
+    jit_prefill = jax.jit(
+        prefill, in_shardings=(p_shard, None),
+        out_shardings=(None, cache_shard),
+    )
+    jit_decode = jax.jit(
+        decode,
+        in_shardings=(p_shard, cache_shard, token_shard, NamedSharding(mesh, P())),
+        out_shardings=(None, cache_shard),
+        donate_argnums=(1,),
+    )
+    return jit_prefill, jit_decode, {
+        "params": p_shard, "caches": cache_shard, "token": token_shard,
+    }

@@ -1,0 +1,78 @@
+"""Latency model (Sec. 4.4): stage transitions, A/B terms, Ideal bound."""
+import pytest
+
+from repro.core.latency_model import LatencyModel, stage_transition
+from repro.topology import Phase, make_table2_topologies
+from repro.topology.algorithms import DIRECT, HALVING_DOUBLING, RING
+
+TOPOS = make_table2_topologies()
+
+
+def test_stage_transition_rs_shrinks_ag_grows():
+    wire, after = stage_transition(Phase.RS, 4, 64.0)
+    assert wire == pytest.approx(48.0)        # (P-1)/P * 64
+    assert after == pytest.approx(16.0)
+    wire, after = stage_transition(Phase.AG, 4, 16.0)
+    assert wire == pytest.approx(48.0)        # symmetric (Fig. 5)
+    assert after == pytest.approx(64.0)
+
+
+def test_fig5_stage_latency_ratios():
+    """Paper Fig. 5: on a 4x4 with BW1=2*BW2, stage2 runs 2x faster."""
+    from repro.topology.topology import NetworkDim, Topology, TopoKind
+
+    topo = Topology("fig5", (
+        NetworkDim(4, TopoKind.SWITCH, 16, 1, 0.0),
+        NetworkDim(4, TopoKind.SWITCH, 8, 1, 0.0),
+    ))
+    lm = LatencyModel(topo)
+    s0 = 64e6
+    w1, s1 = lm.stage_wire_bytes(0, Phase.RS, s0)
+    w2, _ = lm.stage_wire_bytes(1, Phase.RS, s1)
+    t1 = lm.wire_time(0, w1)
+    t2 = lm.wire_time(1, w2)
+    assert t1 / t2 == pytest.approx(2.0)
+
+
+def test_algorithm_steps():
+    assert RING.steps(16, Phase.RS) == 15
+    assert DIRECT.steps(8, Phase.RS) == 1
+    assert HALVING_DOUBLING.steps(16, Phase.RS) == 4
+    assert RING.steps(1, Phase.AG) == 0
+
+
+def test_fixed_delay_ar_sums_rs_and_ag():
+    topo = TOPOS["3D-FC_Ring_SW"]
+    lm = LatencyModel(topo)
+    for k in range(3):
+        assert lm.fixed_delay(k, "AR") == pytest.approx(
+            lm.fixed_delay(k, "RS") + lm.fixed_delay(k, "AG"))
+
+
+def test_total_wire_bytes_schedule_invariant():
+    """Sum over dims of per-NPU wire bytes is the same for ANY dim order."""
+    topo = TOPOS["3D-SW_SW_SW_hetero"]
+    lm = LatencyModel(topo)
+    import itertools
+
+    size = 1e8
+    totals = []
+    for perm in itertools.permutations(range(3)):
+        sched = [(Phase.RS, d) for d in perm] + [(Phase.AG, d) for d in perm[::-1]]
+        wire = 0.0
+        s = size
+        for ph, d in sched:
+            w, s = lm.stage_wire_bytes(d, ph, s)
+            wire += w
+        totals.append(wire)
+    assert max(totals) == pytest.approx(min(totals))
+    assert totals[0] == pytest.approx(lm.total_wire_bytes("AR", size))
+
+
+def test_ideal_time_formula():
+    topo = TOPOS["2D-SW_SW"]
+    lm = LatencyModel(topo)
+    p = topo.total_npus
+    want = 2 * (p - 1) / p * 1e9 / topo.total_bw_bytes
+    assert lm.ideal_time("AR", 1e9) == pytest.approx(want)
+    assert lm.ideal_time("RS", 1e9) == pytest.approx(want / 2)

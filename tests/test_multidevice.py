@@ -1,0 +1,25 @@
+"""Wrapper: run the 8-virtual-device checks in a subprocess (XLA device
+count must be set before jax import, so they cannot run in-process)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+REPO = os.path.dirname(HERE)
+
+
+@pytest.mark.timeout(900)
+def test_multidevice_suite():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "multidevice_checks.py")],
+        env=env, capture_output=True, text=True, timeout=880,
+    )
+    sys.stdout.write(proc.stdout[-4000:])
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "multidevice checks failed"
+    assert "ALL MULTIDEVICE CHECKS PASSED" in proc.stdout

@@ -1,0 +1,92 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency_model import LatencyModel
+from repro.core.scheduler import schedule_collective
+from repro.core.simulator import simulate_scheduled
+from repro.topology import Phase
+from repro.topology.topology import NetworkDim, Topology, TopoKind
+
+KINDS = [TopoKind.RING, TopoKind.FULLY_CONNECTED, TopoKind.SWITCH]
+
+
+@st.composite
+def topologies(draw):
+    n_dims = draw(st.integers(2, 4))
+    dims = []
+    for _ in range(n_dims):
+        p = draw(st.sampled_from([2, 4, 8, 16]))
+        kind = draw(st.sampled_from(KINDS))
+        gbps = draw(st.sampled_from([50, 100, 200, 400, 800, 1600]))
+        links = draw(st.integers(1, 8))
+        lat = draw(st.sampled_from([0.0, 1e-7, 1e-6]))
+        dims.append(NetworkDim(p, kind, gbps, links, lat))
+    return Topology("rand", tuple(dims))
+
+
+@given(topologies(), st.sampled_from(["baseline", "themis", "themis_indep_ag",
+                                      "lookahead"]),
+       st.integers(1, 64), st.floats(1e6, 1e9))
+@settings(max_examples=40, deadline=None)
+def test_schedules_are_valid_permutations(topo, policy, cpc, size):
+    chunks = schedule_collective(topo, "AR", size, cpc, policy)
+    assert len(chunks) == cpc
+    d = topo.num_dims
+    for c in chunks:
+        phases = [p for p, _ in c.schedule]
+        assert phases == [Phase.RS] * d + [Phase.AG] * d  # RS before AG
+        rs = [k for p, k in c.schedule if p == Phase.RS]
+        ag = [k for p, k in c.schedule if p == Phase.AG]
+        assert sorted(rs) == list(range(d))               # permutation
+        assert sorted(ag) == list(range(d))
+    assert sum(c.size_bytes for c in chunks) == abs(size) or math.isclose(
+        sum(c.size_bytes for c in chunks), size, rel_tol=1e-9)
+
+
+@given(topologies(), st.floats(1e7, 1e9))
+@settings(max_examples=25, deadline=None)
+def test_total_wire_invariant_across_policies(topo, size):
+    """Total bytes on the wire are schedule-invariant (only placement of
+    load across dims changes)."""
+    lm = LatencyModel(topo)
+    want = lm.total_wire_bytes("AR", size)
+    for policy in ("baseline", "themis"):
+        res, _ = simulate_scheduled(topo, "AR", size, policy=policy,
+                                    chunks_per_collective=16)
+        assert math.isclose(sum(res.dim_wire_bytes), want, rel_tol=1e-9)
+
+
+@given(topologies(), st.floats(5e7, 1e9))
+@settings(max_examples=25, deadline=None)
+def test_themis_not_worse_than_baseline(topo, size):
+    """Themis+SCF should never lose to baseline by more than the chunk
+    quantum slack (it degenerates to baseline via the threshold guard)."""
+    rb, _ = simulate_scheduled(topo, "AR", size, policy="baseline",
+                               intra="FIFO", chunks_per_collective=64)
+    rt, _ = simulate_scheduled(topo, "AR", size, policy="themis",
+                               intra="SCF", chunks_per_collective=64)
+    assert rt.makespan <= rb.makespan * 1.10
+
+
+@given(topologies(), st.floats(1e7, 1e9),
+       st.sampled_from(["baseline", "themis"]))
+@settings(max_examples=25, deadline=None)
+def test_makespan_bounds(topo, size, policy):
+    """ideal <= makespan; utilization in (0, 1]."""
+    lm = LatencyModel(topo)
+    res, _ = simulate_scheduled(topo, "AR", size, policy=policy)
+    assert res.makespan >= lm.ideal_time("AR", size) * 0.999
+    u = res.avg_bw_utilization(topo)
+    assert 0.0 < u <= 1.0 + 1e-9
+
+
+@given(topologies(), st.integers(2, 32))
+@settings(max_examples=20, deadline=None)
+def test_water_filling_preserves_total_mass(topo, cpc):
+    size = 3e8
+    chunks = schedule_collective(topo, "AR", size, cpc, "themis",
+                                 water_filling=True)
+    assert math.isclose(sum(c.size_bytes for c in chunks), size, rel_tol=1e-6)
+    assert len(chunks) <= cpc

@@ -1,0 +1,95 @@
+"""Serving features: int8 KV cache, microbatch picker, serve fns."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ParallelConfig, ShapeConfig, TRAIN_4K, get_arch
+from repro.models import build_model
+from repro.models import transformer as tr
+
+
+def test_int8_kv_cache_decode_close_to_bf16():
+    cfg = get_arch("qwen2.5-3b", reduced=True).replace(remat=False)
+    cfg_q = cfg.replace(kv_quant=True)
+    params = tr.init_lm(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    _, c0 = tr.prefill(params, toks, cfg, max_len=20)
+    _, c1 = tr.prefill(params, toks, cfg_q, max_len=20)
+    nxt = jnp.asarray([5, 9], jnp.int32)
+    l0, _ = tr.decode_step(params, c0, nxt, jnp.asarray(16, jnp.int32), cfg)
+    l1, _ = tr.decode_step(params, c1, nxt, jnp.asarray(16, jnp.int32), cfg_q)
+    assert float(jnp.abs(l0 - l1).max()) < 0.3   # int8 quantization noise
+    # memory layout: int8 cache is ~half the bf16 cache
+    def nbytes(c):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c))
+    assert nbytes(c1) < 0.6 * nbytes(c0)
+
+
+def test_int8_kv_argmax_stable():
+    cfg = get_arch("llama3-8b", reduced=True).replace(remat=False)
+    params = tr.init_lm(jax.random.key(1), cfg)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 24)), jnp.int32)
+    outs = {}
+    for quant in (False, True):
+        c = cfg.replace(kv_quant=quant)
+        logits, caches = tr.prefill(params, toks, c, max_len=32)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        ids = [tok]
+        for i in range(4):
+            logits, caches = tr.decode_step(
+                params, caches, tok, jnp.asarray(24 + i, jnp.int32), c)
+            tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+            ids.append(tok)
+        outs[quant] = np.stack([np.asarray(t) for t in ids])
+    # greedy decode should rarely flip under int8 KV; require full agreement
+    # on this seed (validated stable)
+    np.testing.assert_array_equal(outs[False], outs[True])
+
+
+def test_pick_microbatch_heuristic():
+    from repro.launch.dryrun import pick_microbatch
+
+    cfg = get_arch("granite-34b")
+    par_sp = ParallelConfig(data=16, model=16, seq_sharding=True)
+    par_nosp = ParallelConfig(data=16, model=16, seq_sharding=False)
+    axes = {"data": 16, "model": 16}
+    n_sp = pick_microbatch(cfg, TRAIN_4K, axes, par_sp)
+    n_nosp = pick_microbatch(cfg, TRAIN_4K, axes, par_nosp)
+    assert n_nosp >= n_sp            # SP shrinks the carry -> fewer microbatches
+    assert TRAIN_4K.global_batch % n_nosp == 0
+    # small model needs no accumulation
+    small = get_arch("qwen2.5-3b", reduced=True)
+    assert pick_microbatch(small, TRAIN_4K, axes, par_sp) == 1
+
+
+def test_microbatched_step_matches_unbatched():
+    from repro.configs import TrainConfig
+    from repro.launch.mesh import make_mesh
+    from repro.train.step import gspmd_init_state, make_gspmd_train_step
+
+    cfg = get_arch("llama3-8b", reduced=True).replace(remat=False)
+    api = build_model(cfg)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    par = ParallelConfig(data=1, model=1)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)),
+                              jnp.int32),
+    }
+    outs = {}
+    for micro in (1, 4):
+        tcfg = TrainConfig(learning_rate=1e-2, warmup_steps=1, total_steps=5,
+                           weight_decay=0.0, microbatch=micro)
+        step, *_ = make_gspmd_train_step(api, mesh, par, tcfg)
+        p, o = gspmd_init_state(api, mesh, par)
+        p, o, m = step(p, o, batch)
+        outs[micro] = (float(m["loss"]), p)
+    assert abs(outs[1][0] - outs[4][0]) < 2e-3
+    deltas = [float(jnp.abs(a - b).max()) for a, b in
+              zip(jax.tree.leaves(outs[1][1]), jax.tree.leaves(outs[4][1]))]
+    assert max(deltas) < 3e-2  # identical up to Adam sign-noise on fp ties

@@ -1,0 +1,98 @@
+"""Partition-rule unit tests (no multi-device needed: rules are pure)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ParallelConfig, TRAIN_4K, get_arch
+from repro.launch.mesh import make_mesh
+from repro.models import build_model
+from repro.sharding.specs import (
+    batch_pspec,
+    cache_pspec,
+    opt_state_pspec,
+    param_pspec,
+)
+
+MESH = make_mesh((1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Shape-only stand-in so rules can be tested for a 16x16 mesh on CPU."""
+
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+M16 = FakeMesh(data=16, model=16)
+PAR = ParallelConfig(data=16, model=16)
+PAR_FSDP = ParallelConfig(data=16, model=16, fsdp=True)
+
+
+def test_embed_rule():
+    assert param_pspec("embed", (151936, 2048), M16, PAR) == P("model", None)
+    assert param_pspec("embed", (151936, 2048), M16, PAR_FSDP) == P("model", "data")
+
+
+def test_proj_rules():
+    assert param_pspec("blocks/attn/wq", (32, 4096, 4096), M16, PAR) == \
+        P(None, None, "model")
+    assert param_pspec("blocks/attn/wo", (32, 4096, 4096), M16, PAR_FSDP) == \
+        P(None, "model", "data")
+    assert param_pspec("blocks/mlp/wi", (32, 4096, 14336), M16, PAR_FSDP) == \
+        P(None, "data", "model")
+
+
+def test_moe_expert_rule():
+    # (L, E, D, F): experts over model, FSDP over d_model
+    assert param_pspec("blocks/moe/wi", (94, 128, 4096, 1536), M16, PAR_FSDP) \
+        == P(None, "model", "data", None)
+    assert param_pspec("blocks/moe/wo", (94, 128, 1536, 4096), M16, PAR_FSDP) \
+        == P(None, "model", None, "data")
+
+
+def test_divisibility_safety():
+    # kv-head projection of MQA (kv=1 -> 128 cols): still divisible; but a
+    # 10-col output must drop the axis
+    assert param_pspec("blocks/attn/wk", (32, 4096, 10), M16, PAR) == \
+        P(None, None, None)
+    # norm vectors replicate
+    assert param_pspec("blocks/ln1", (32, 4096), M16, PAR) == P(None, None)
+
+
+def test_opt_state_zero1_adds_data_axis():
+    spec = opt_state_pspec(P(None, None, "model"), (32, 4096, 14336), M16, PAR)
+    assert spec == P(None, "data", "model")
+    # fsdp already shards over data -> unchanged
+    spec = opt_state_pspec(P(None, "data", "model"), (32, 4096, 14336), M16,
+                           PAR_FSDP)
+    assert spec == P(None, "data", "model")
+
+
+def test_batch_rule():
+    assert batch_pspec((256, 4096), M16, 256) == P("data", None)
+    m3 = FakeMesh(pod=2, data=16, model=16)
+    assert batch_pspec((256, 4096), m3, 256) == P(("pod", "data"), None)
+    # batch=1 (long_500k) cannot shard
+    assert batch_pspec((1, 524288), m3, 1) == P(None, None)
+
+
+def test_cache_rule():
+    # (L, B, T, KV, hd): kv divisible -> heads sharded
+    assert cache_pspec("k", (32, 128, 32768, 16, 128), M16, 128) == \
+        P(None, "data", None, "model", None)
+    # MQA kv=1 -> shard head_dim instead
+    assert cache_pspec("k", (88, 128, 32768, 1, 128), M16, 128) == \
+        P(None, "data", None, None, "model")
+
+
+def test_param_shardings_cover_all_archs():
+    from repro.sharding.specs import param_shardings
+
+    for arch in ("llama3-8b", "qwen3-moe-235b-a22b", "recurrentgemma-2b",
+                 "xlstm-1.3b", "whisper-medium"):
+        cfg = get_arch(arch, reduced=True)
+        api = build_model(cfg)
+        tree = param_shardings(api.param_spec(), MESH,
+                               ParallelConfig(data=1, model=1))
+        assert len(jax.tree.leaves(tree)) == len(jax.tree.leaves(api.param_spec()))

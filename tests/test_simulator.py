@@ -1,0 +1,95 @@
+"""Event-driven multi-rail simulator tests."""
+import pytest
+
+from repro.core.latency_model import LatencyModel
+from repro.core.simulator import simulate, simulate_scheduled
+from repro.core.scheduler import schedule_collective
+from repro.topology import make_table2_topologies
+from repro.topology.topology import NetworkDim, Topology, TopoKind
+
+TOPOS = make_table2_topologies()
+MB = 1e6
+
+
+def single_dim_topo(p=4, gbps=80.0):
+    return Topology("1d", (NetworkDim(p, TopoKind.RING, gbps, 1, 0.0),))
+
+
+def test_single_dim_rs_time_is_wire_over_bw():
+    topo = single_dim_topo()
+    lm = LatencyModel(topo)
+    res, chunks = simulate_scheduled(topo, "RS", 100 * MB, policy="baseline",
+                                     chunks_per_collective=1)
+    want = lm.wire_time(0, 0.75 * 100 * MB)
+    assert res.makespan == pytest.approx(want, rel=1e-6)
+
+
+def test_chunking_does_not_change_single_dim_bw_bound_time():
+    topo = single_dim_topo()
+    r1, _ = simulate_scheduled(topo, "AR", 100 * MB, policy="baseline",
+                               chunks_per_collective=1)
+    r64, _ = simulate_scheduled(topo, "AR", 100 * MB, policy="baseline",
+                                chunks_per_collective=64)
+    assert r64.makespan == pytest.approx(r1.makespan, rel=1e-3)
+
+
+def test_pipelining_overlaps_dims():
+    """With 2 dims and many chunks, makespan ~ slowest dim's serial load,
+    not the sum of both dims."""
+    topo = TOPOS["2D-SW_SW"]
+    lm = LatencyModel(topo)
+    res, chunks = simulate_scheduled(topo, "AR", 500 * MB, policy="baseline",
+                                     chunks_per_collective=64)
+    dim0_serial = sum(
+        lm.calc_loads(c.size_bytes, c.schedule).get(0, 0.0) for c in chunks
+    )
+    assert res.makespan < dim0_serial * 1.1
+
+
+def test_wire_bytes_conservation():
+    topo = TOPOS["3D-SW_SW_SW_homo"]
+    lm = LatencyModel(topo)
+    size = 250 * MB
+    for policy in ("baseline", "themis"):
+        res, _ = simulate_scheduled(topo, "AR", size, policy=policy)
+        assert sum(res.dim_wire_bytes) == pytest.approx(
+            lm.total_wire_bytes("AR", size), rel=1e-9)
+
+
+def test_themis_beats_baseline_on_overprovisioned():
+    for name in ("3D-SW_SW_SW_homo", "4D-Ring_FC_Ring_SW"):
+        topo = TOPOS[name]
+        rb, _ = simulate_scheduled(topo, "AR", 500 * MB, policy="baseline",
+                                   intra="FIFO")
+        rt, _ = simulate_scheduled(topo, "AR", 500 * MB, policy="themis",
+                                   intra="SCF")
+        assert rt.makespan < rb.makespan
+        assert rt.avg_bw_utilization(topo) > rb.avg_bw_utilization(topo)
+
+
+def test_utilization_never_exceeds_one():
+    for name, topo in TOPOS.items():
+        for policy in ("baseline", "themis"):
+            res, _ = simulate_scheduled(topo, "AR", 100 * MB, policy=policy)
+            assert 0.0 < res.avg_bw_utilization(topo) <= 1.0 + 1e-9
+
+
+def test_makespan_at_least_ideal():
+    for name, topo in TOPOS.items():
+        lm = LatencyModel(topo)
+        res, _ = simulate_scheduled(topo, "AR", 1e9, policy="themis")
+        assert res.makespan >= lm.ideal_time("AR", 1e9) * 0.999
+
+
+def test_activity_rates_bounded():
+    topo = TOPOS["3D-SW_SW_SW_homo"]
+    res, _ = simulate_scheduled(topo, "AR", 1e9, policy="themis")
+    for k in range(topo.num_dims):
+        assert 0.0 <= res.activity_rate(k) <= 1.0 + 1e-9
+
+
+def test_scf_orders_smallest_first_within_dim():
+    topo = TOPOS["2D-SW_SW"]
+    chunks = schedule_collective(topo, "AR", 100 * MB, 16, "themis")
+    res = simulate(topo, [chunks], intra="SCF", fusion=False)
+    assert all(len(o) > 0 for o in res.dim_op_order)

@@ -1,0 +1,54 @@
+"""Table 2 topology data + Sec. 6.3 provisioning analysis."""
+import pytest
+
+from repro.core.insights import analyze, baseline_utilization_bound, classify_pair
+from repro.topology import GBPS, make_current_topology, make_table2_topologies
+
+TOPOS = make_table2_topologies()
+
+
+def test_table2_sizes_and_npus():
+    expect = {
+        "2D-SW_SW": "16x64",
+        "3D-SW_SW_SW_homo": "16x8x8",
+        "3D-SW_SW_SW_hetero": "16x8x8",
+        "3D-FC_Ring_SW": "8x16x8",
+        "4D-Ring_SW_SW_SW": "4x4x8x8",
+        "4D-Ring_FC_Ring_SW": "4x8x4x8",
+    }
+    for name, size in expect.items():
+        assert TOPOS[name].size_str() == size
+        assert TOPOS[name].total_npus == 1024
+
+
+def test_table2_aggregate_bw():
+    # paper's Aggr BW/NPU column (Gb/s): 2D-SW_SW = (1200, 800)
+    t = TOPOS["2D-SW_SW"]
+    assert t.dims[0].aggr_bw_bytes == pytest.approx(1200 * GBPS)
+    assert t.dims[1].aggr_bw_bytes == pytest.approx(800 * GBPS)
+    t = TOPOS["4D-Ring_FC_Ring_SW"]
+    assert [d.aggr_bw_bytes / GBPS for d in t.dims] == pytest.approx(
+        [3000, 1400, 1200, 800])
+
+
+def test_provisioning_classification():
+    # current 2D system: BW1=1200, P1=16, BW2=100 -> ratio 1200/1600 < 1
+    cur = make_current_topology()
+    v = classify_pair(cur, 0, 1, tol=0.3)
+    assert v.ratio == pytest.approx(1200 / (16 * 100))
+    # 3D homo: BW1=800 vs 16*800 -> heavily over-provisioned dim2
+    v = classify_pair(TOPOS["3D-SW_SW_SW_homo"], 0, 1)
+    assert v.verdict == "over-provisioned"
+    assert v.ratio < 0.1
+
+
+def test_baseline_bound_matches_paper_intuition():
+    """Paper Sec. 3: current-2D near full util; 3D-homo ~35%."""
+    assert baseline_utilization_bound(make_current_topology()) > 0.9
+    b = baseline_utilization_bound(TOPOS["3D-SW_SW_SW_homo"])
+    assert 0.3 < b < 0.4
+
+
+def test_analyze_covers_all_pairs():
+    t = TOPOS["4D-Ring_SW_SW_SW"]
+    assert len(analyze(t)) == 6  # C(4,2)

@@ -1,0 +1,134 @@
+"""Train-loop integration + fault tolerance (single device)."""
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import AsyncCheckpointer, latest_step, restore, save
+from repro.configs import ParallelConfig, TrainConfig, get_arch
+from repro.data import Prefetcher, SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.models import build_model
+from repro.train.step import gspmd_init_state, make_gspmd_train_step
+
+
+def _setup(tmp_path, steps=12):
+    cfg = get_arch("llama3-8b", reduced=True).replace(remat=False)
+    api = build_model(cfg)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    parallel = ParallelConfig(data=1, model=1)
+    tcfg = TrainConfig(learning_rate=1e-2, total_steps=steps, warmup_steps=2,
+                       checkpoint_dir=str(tmp_path))
+    step_fn, *_ = make_gspmd_train_step(api, mesh, parallel, tcfg)
+    params, opt = gspmd_init_state(api, mesh, parallel)
+    ds = SyntheticLM(cfg.vocab_size, global_batch=4, seq_len=32, seed=7)
+    return api, mesh, step_fn, params, opt, ds
+
+
+def test_loss_decreases_over_training(tmp_path):
+    api, mesh, step_fn, params, opt, ds = _setup(tmp_path)
+    losses = []
+    for step in range(12):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step % 2).items()}
+        params, opt, m = step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_checkpoint_restart_bitwise_resume(tmp_path):
+    """Crash/restart: resuming from the checkpoint reproduces the exact same
+    trajectory as the uninterrupted run (same data cursor, same state)."""
+    api, mesh, step_fn, params, opt, ds = _setup(tmp_path)
+    # the jit step donates its inputs: give each run its own buffers
+    import copy as _copy
+    snap = jax.tree.map(jnp.copy, (params, opt))
+
+    # uninterrupted reference: 6 steps
+    p_ref, o_ref = jax.tree.map(jnp.copy, snap)
+    for step in range(6):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+        p_ref, o_ref, m_ref = step_fn(p_ref, o_ref, batch)
+
+    # run 3 steps, checkpoint, "crash", restore, run 3 more
+    p, o = jax.tree.map(jnp.copy, snap)
+    for step in range(3):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+        p, o, _ = step_fn(p, o, batch)
+    save(str(tmp_path), 3, {"params": p, "opt": o},
+         extra={"next_step": 3, "seed": ds.seed})
+    del p, o
+
+    tmpl = jax.tree.map(jnp.copy, snap)
+    restored, extra = restore(str(tmp_path), {"params": tmpl[0], "opt": tmpl[1]})
+    p, o = restored["params"], restored["opt"]
+    for step in range(extra["next_step"], 6):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+        p, o, m = step_fn(p, o, batch)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_manifest_survives_partial_write(tmp_path):
+    api, mesh, step_fn, params, opt, ds = _setup(tmp_path)
+    save(str(tmp_path), 1, {"params": params})
+    save(str(tmp_path), 2, {"params": params})
+    # simulate a crash that wrote the manifest but not the data
+    with open(os.path.join(tmp_path, "MANIFEST.json"), "w") as f:
+        json.dump({"latest_step": 99}, f)
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_checkpoint_gc_keeps_n(tmp_path):
+    api, mesh, step_fn, params, opt, ds = _setup(tmp_path)
+    for s in range(5):
+        save(str(tmp_path), s, {"p": jnp.zeros(3)}, keep=2)
+    dirs = [d for d in os.listdir(tmp_path) if d.startswith("step-")]
+    assert len(dirs) == 2
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path))
+    state = {"x": jnp.arange(10.0)}
+    ck.save_async(5, state, extra={"next_step": 5})
+    ck.wait()
+    restored, extra = restore(str(tmp_path), state)
+    np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                  np.arange(10.0))
+    assert extra["next_step"] == 5
+
+
+def test_prefetcher_is_deterministic_and_resumable(tmp_path):
+    ds = SyntheticLM(101, 4, 16, seed=3)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    pf = Prefetcher(ds, mesh, start_step=0)
+    got = dict(next(pf) for _ in range(3))
+    pf.close()
+    pf2 = Prefetcher(ds, mesh, start_step=2)
+    step, batch = next(pf2)
+    pf2.close()
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(batch["tokens"]),
+                                  np.asarray(got[2]["tokens"]))
+
+
+def test_train_driver_end_to_end(tmp_path, monkeypatch, capsys):
+    """The CLI driver trains a reduced model and reports decreasing loss."""
+    from repro.launch import train as train_mod
+
+    argv = ["train", "--arch", "qwen2.5-3b", "--reduced", "--steps", "10",
+            "--batch", "4", "--seq", "32", "--mesh", "1x1", "--lr", "1e-2",
+            "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "5",
+            "--log-every", "5"]
+    monkeypatch.setattr(sys, "argv", argv)
+    losses = train_mod.main()
+    assert len(losses) == 10
+    # fresh uniform-random batches each step: loss plateaus at ~ln(vocab);
+    # assert it stays finite and does not blow up.
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0] + 0.5
+    assert latest_step(str(tmp_path / "ck")) == 10

@@ -1,0 +1,55 @@
+"""Fig. 12 workload models + iteration engine."""
+import pytest
+
+from repro.core.workloads import (
+    ALL_WORKLOADS,
+    iteration_time,
+    make_transformer_1t,
+    resnet152_param_buckets,
+    split_topology,
+)
+from repro.topology import make_table2_topologies
+
+TOPOS = make_table2_topologies()
+
+
+def test_resnet_bucket_total_matches_params():
+    total = sum(resnet152_param_buckets()) / 2  # fp16 bytes -> params
+    assert 55e6 < total < 65e6  # ~60.2M params
+
+
+def test_split_topology_boundary_inside_dim():
+    mp, dp = split_topology(TOPOS["2D-SW_SW"], 128)
+    assert mp.size_str() == "16x8"
+    assert dp.size_str() == "8"
+    mp, dp = split_topology(TOPOS["4D-Ring_SW_SW_SW"], 128)
+    assert mp.total_npus == 128
+    assert dp.total_npus == 8
+
+
+def test_iteration_ordering_baseline_ge_themis_ge_ideal():
+    w = ALL_WORKLOADS["resnet152"]()
+    for topo in TOPOS.values():
+        b = iteration_time(w, topo, "baseline", intra="FIFO").total_s
+        t = iteration_time(w, topo, "themis", intra="SCF").total_s
+        i = iteration_time(w, topo, "ideal").total_s
+        assert b >= t * 0.999
+        assert t >= i * 0.98
+
+
+def test_transformer_1t_dp_single_dim():
+    """Paper: T-1T's DP comm uses only the last network dim -> baseline and
+    Themis produce identical DP exposure."""
+    w = make_transformer_1t()
+    topo = TOPOS["3D-SW_SW_SW_homo"]
+    b = iteration_time(w, topo, "baseline", intra="FIFO")
+    t = iteration_time(w, topo, "themis", intra="SCF")
+    assert b.exposed_dp_s == pytest.approx(t.exposed_dp_s, rel=0.02)
+    assert t.exposed_mp_s < b.exposed_mp_s  # Themis helps the MP part
+
+
+def test_all_workloads_construct():
+    for name, maker in ALL_WORKLOADS.items():
+        w = maker()
+        assert w.compute_s > 0
+        assert w.comm_ops
