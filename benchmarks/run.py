@@ -17,6 +17,7 @@ def main() -> None:
         fig11_utilization,
         fig12_workloads,
         insights_study,
+        overlap_study,
         roofline_table,
     )
     from benchmarks.common import print_rows
@@ -27,6 +28,7 @@ def main() -> None:
         ("fig10", fig10_chunks),
         ("fig11", fig11_utilization),
         ("fig12", fig12_workloads),
+        ("overlap", overlap_study),
         ("insights", insights_study),
         ("beyond", beyond_paper),
         ("roofline", roofline_table),

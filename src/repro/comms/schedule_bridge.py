@@ -18,6 +18,7 @@ import re
 from collections import defaultdict
 
 from repro.core.latency_model import LatencyModel
+from repro.core.requests import CollectiveRequest
 from repro.core.scheduler import ThemisScheduler, baseline_order
 from repro.topology import Phase, make_tpu_pod_topology
 from repro.topology.topology import NetworkDim, Topology, GBPS, TopoKind
@@ -59,6 +60,47 @@ def themis_axis_orders(
         rs = [d for ph, d in c.schedule if ph == Phase.RS]
         orders.append(tuple(names[d] for d in rs))
     return orders
+
+
+def themis_axis_orders_stream(
+    axis_sizes: dict[str, int],
+    bucket_bytes: list[float],
+    n_chunks: int,
+    policy: str = "themis",
+    issue_times: list[float] | None = None,
+) -> list[list[tuple[str, ...]]]:
+    """Per-chunk RS axis orders for a *stream* of gradient-bucket ARs.
+
+    Unlike :func:`themis_axis_orders` (one fused collective, tracker reset),
+    this runs ONE incremental scheduler across the whole bucket stream
+    (``schedule_request``): bucket k's chunk orders account for the residual
+    dim loads of buckets 0..k-1 still in flight — the trace-time analogue of
+    overlapping backprop collectives.  ``issue_times`` defaults to
+    back-to-back issue (all 0.0, i.e. maximum residual contention).
+    Returns one order list per bucket, each with ``n_chunks`` entries.
+    """
+    topo, names = topology_from_axes(axis_sizes)
+    if topo.num_dims == 0:
+        return [[()] * n_chunks for _ in bucket_bytes]
+    if policy in ("baseline", "hier_baseline"):
+        rs = [d for ph, d in baseline_order(topo.num_dims, "RS")]
+        return [[tuple(names[d] for d in rs)] * n_chunks for _ in bucket_bytes]
+    if issue_times is None:
+        issue_times = [0.0] * len(bucket_bytes)
+    sched = ThemisScheduler(
+        LatencyModel(topo), policy if policy != "themis_scf" else "themis")
+    out: list[list[tuple[str, ...]] | None] = [None] * len(bucket_bytes)
+    # schedule in issue order (the tracker clock only moves forward) while
+    # returning orders indexed like the input buckets
+    for i in sorted(range(len(bucket_bytes)), key=lambda i: (issue_times[i], i)):
+        chunks = sched.schedule_request(
+            CollectiveRequest("AR", bucket_bytes[i], issue_time=issue_times[i]),
+            n_chunks)
+        out[i] = [
+            tuple(names[d] for ph, d in c.schedule if ph == Phase.RS)
+            for c in chunks
+        ]
+    return out
 
 
 def predicted_axis_loads(

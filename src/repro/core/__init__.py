@@ -8,16 +8,23 @@ from repro.core.chunking import Chunk, coalesce_by_order, split_equal
 from repro.core.consistency import fix_intra_dim_order, verify_consistent_execution
 from repro.core.latency_model import LatencyModel, StageOp, stage_transition
 from repro.core.load_tracker import DimLoadTracker
+from repro.core.requests import CollectiveRequest
 from repro.core.scheduler import (
     POLICIES,
     ThemisScheduler,
     baseline_order,
     schedule_collective,
 )
-from repro.core.simulator import SimResult, simulate, simulate_scheduled
+from repro.core.simulator import (
+    SimResult,
+    simulate,
+    simulate_requests,
+    simulate_scheduled,
+)
 
 __all__ = [
     "Chunk",
+    "CollectiveRequest",
     "DimLoadTracker",
     "LatencyModel",
     "POLICIES",
@@ -29,6 +36,7 @@ __all__ = [
     "fix_intra_dim_order",
     "schedule_collective",
     "simulate",
+    "simulate_requests",
     "simulate_scheduled",
     "split_equal",
     "stage_transition",

@@ -34,6 +34,7 @@ from typing import Callable, Sequence
 from repro.core.chunking import Chunk, coalesce_by_order, split_equal
 from repro.core.latency_model import LatencyModel, StageOp
 from repro.core.load_tracker import DimLoadTracker
+from repro.core.requests import CollectiveRequest
 from repro.topology import Phase, Topology
 
 POLICIES = ("baseline", "themis", "themis_indep_ag", "lookahead",
@@ -82,15 +83,54 @@ class ThemisScheduler:
         *,
         water_filling: bool = False,
     ) -> list[Chunk]:
-        """Returns chunks with their stage schedules (Algorithm 1)."""
+        """Returns chunks with their stage schedules (Algorithm 1).
+
+        One-shot mode: the tracker is reset per collective (Sec. 4.4) —
+        correct when collectives run back-to-back.  For overlapping
+        collectives use :meth:`schedule_request`.
+        """
         if collective not in ("AR", "RS", "AG"):
             raise ValueError(f"unsupported collective {collective}")
+        self.tracker.reset(collective)
+        return self._split_and_schedule(
+            collective, collective_bytes, chunks_per_collective,
+            water_filling=water_filling)
+
+    def schedule_request(
+        self,
+        request: CollectiveRequest,
+        chunks_per_collective: int,
+        *,
+        water_filling: bool = False,
+    ) -> list[Chunk]:
+        """Incremental path for overlapping collectives (Sec. 4.4's
+        running-load view extended across requests).
+
+        Instead of resetting the Dim Load Tracker per collective, the
+        tracker's clock advances to the request's issue time (draining loads
+        already served) and the request's A_K is *added* — so a bucket
+        issued mid-backprop sees the residual contention of every collective
+        still in flight and is steered around it.
+        """
+        self.tracker.advance_to(request.issue_time)
+        self.tracker.begin_collective(request.collective)
+        return self._split_and_schedule(
+            request.collective, request.size_bytes, chunks_per_collective,
+            water_filling=water_filling)
+
+    def _split_and_schedule(
+        self,
+        collective: str,
+        collective_bytes: float,
+        chunks_per_collective: int,
+        *,
+        water_filling: bool,
+    ) -> list[Chunk]:
         if collective == "AG":
             # Collective size convention (paper Sec. 2.3 / footnote 7): the
             # size is the large end — the gathered result.  Chunks start at
             # the pre-gather per-NPU resident size.
             collective_bytes = collective_bytes / self.latency_model.topology.total_npus
-        self.tracker.reset(collective)
         if water_filling and self.policy != "baseline":
             micro = split_equal(collective_bytes, max(1024, 8 * chunks_per_collective))
             for chunk in micro:

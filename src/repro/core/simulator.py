@@ -18,8 +18,18 @@ on a multi-dimensional network (paper Sec. 2.3/5.1):
   * optional enforced per-dim op order (Sec. 4.6.2 consistency) and random
     service-time jitter for consistency experiments.
 
+The engine is *online and arrival-time-aware*: every collective (a "group"
+of chunks) carries an issue time, so overlapping collectives — backprop
+bucket streams, pipeline stages, multi-tenant jobs — contend for shared
+dimensions exactly as they would on real hardware.  ``simulate_requests``
+is the high-level entry: a stream of :class:`CollectiveRequest`s is
+scheduled incrementally (``ThemisScheduler.schedule_request``, which keeps
+the Dim Load Tracker running across requests) and simulated jointly.
+
 Outputs makespan, per-dim busy time / wire bytes, BW utilization (the
-paper's weighted-average metric), and per-dim activity timelines (Fig. 9).
+paper's weighted-average metric), per-dim activity timelines (Fig. 9),
+per-request completion times, and per-dim service logs attributing every
+service interval to the requests it carried.
 """
 from __future__ import annotations
 
@@ -29,9 +39,13 @@ from dataclasses import dataclass, field
 
 from repro.core.chunking import Chunk
 from repro.core.latency_model import LatencyModel
+from repro.core.requests import CollectiveRequest
 from repro.topology import Topology
 
 OpId = tuple[int, int]  # (chunk_id, stage_idx)
+
+# One served batch on a dimension: (start, end, group ids carried).
+ServiceInterval = tuple[float, float, tuple[int, ...]]
 
 
 @dataclass
@@ -41,6 +55,8 @@ class StageTask:
     dim: int
     wire_bytes: float
     fixed_delay: float
+    group: int = 0
+    priority: int = 0
     arrival_seq: int = 0
     ready_time: float = 0.0
 
@@ -56,6 +72,10 @@ class SimResult:
     dim_wire_bytes: list[float]
     dim_activity: list[list[tuple[float, float]]]  # intervals w/ pending work
     dim_op_order: list[list[OpId]]                 # service order per dim
+    # -- arrival-time-aware extensions ---------------------------------------
+    dim_services: list[list[ServiceInterval]] = field(default_factory=list)
+    group_issue: list[float] = field(default_factory=list)
+    group_finish: list[float] = field(default_factory=list)
 
     def avg_bw_utilization(self, topology: Topology) -> float:
         """Weighted average BW utilization (weights = per-dim BW budget)."""
@@ -70,9 +90,34 @@ class SimResult:
             return 0.0
         return sum(e - s for s, e in self.dim_activity[dim]) / self.makespan
 
+    def group_span(self, group: int) -> float:
+        """Issue-to-completion latency of one collective."""
+        return self.group_finish[group] - self.group_issue[group]
+
+    def groups_interleave_on(self, dim: int) -> bool:
+        """True if the service order on ``dim`` switches between distinct
+        groups and back — i.e. collectives genuinely contend rather than
+        running back-to-back.  A batch fusing several groups also counts."""
+        seen_transitions: set[tuple[int, int]] = set()
+        prev: int | None = None
+        for _, _, groups in self.dim_services[dim]:
+            if len(groups) > 1:
+                return True
+            g = groups[0]
+            if prev is not None and g != prev:
+                if (g, prev) in seen_transitions:
+                    return True  # came back to an earlier group: A..B..A
+                seen_transitions.add((prev, g))
+            prev = g
+        return False
+
 
 def _build_tasks(
-    latency_model: LatencyModel, chunks: list[Chunk], id_offset: int = 0
+    latency_model: LatencyModel,
+    chunks: list[Chunk],
+    id_offset: int = 0,
+    group: int = 0,
+    priority: int = 0,
 ) -> dict[OpId, StageTask]:
     tasks: dict[OpId, StageTask] = {}
     for chunk in chunks:
@@ -86,6 +131,8 @@ def _build_tasks(
                 dim=dim,
                 wire_bytes=wire,
                 fixed_delay=latency_model.step_delay(dim, phase),
+                group=group,
+                priority=priority,
             )
     return tasks
 
@@ -94,6 +141,8 @@ def simulate(
     topology: Topology,
     chunk_groups: list[list[Chunk]],
     *,
+    issue_times: list[float] | None = None,
+    priorities: list[int] | None = None,
     intra: str = "SCF",
     fusion: bool = True,
     fusion_limit: int = 8,
@@ -101,8 +150,13 @@ def simulate(
     jitter: float = 0.0,
     seed: int = 0,
 ) -> SimResult:
-    """Simulate one or more collectives (``chunk_groups``) issued at t=0.
+    """Simulate one or more collectives (``chunk_groups``).
 
+    ``issue_times``: per-group arrival time (seconds); default all 0.0.
+        A group's chunks become ready only once its collective is issued,
+        so staggered groups overlap and contend on shared dims.
+    ``priorities``: per-group service priority (higher first within a dim's
+        ready queue; default all equal).
     ``intra``: 'FIFO' | 'SCF' intra-dimension discipline (Sec. 4.3).
     ``fusion``: fuse ops that cannot individually saturate a dim's BW.
     ``enforced_order``: per-dim list of op ids that must be served in order
@@ -115,11 +169,22 @@ def simulate(
     rng = random.Random(seed)
     lm = LatencyModel(topology)
     num_dims = topology.num_dims
+    n_groups = len(chunk_groups)
+    if issue_times is None:
+        issue_times = [0.0] * n_groups
+    if priorities is None:
+        priorities = [0] * n_groups
+    if len(issue_times) != n_groups or len(priorities) != n_groups:
+        raise ValueError("issue_times/priorities must match chunk_groups")
 
     tasks: dict[OpId, StageTask] = {}
+    group_of_chunk: dict[int, int] = {}
     offset = 0
-    for group in chunk_groups:
-        tasks.update(_build_tasks(lm, group, id_offset=offset))
+    for g, group in enumerate(chunk_groups):
+        tasks.update(_build_tasks(lm, group, id_offset=offset, group=g,
+                                  priority=priorities[g]))
+        for c in group:
+            group_of_chunk[c.index + offset] = g
         if group:
             offset += max(c.index for c in group) + 1
 
@@ -133,9 +198,11 @@ def simulate(
     dim_busy = [0.0] * num_dims
     dim_wire = [0.0] * num_dims
     dim_order: list[list[OpId]] = [[] for _ in range(num_dims)]
+    dim_services: list[list[ServiceInterval]] = [[] for _ in range(num_dims)]
     activity: list[list[tuple[float, float]]] = [[] for _ in range(num_dims)]
     pending_since = [None] * num_dims  # type: list[float | None]
     enforced_pos = [0] * num_dims
+    group_finish = [t for t in issue_times]  # empty groups finish at issue
     seq = itertools.count()
 
     # Event heap: (time, tiebreak, kind, payload)
@@ -147,7 +214,7 @@ def simulate(
         heapq.heappush(events, (t, task.arrival_seq, "ready", task))
 
     for cid in chain_len:
-        push_ready(tasks[(cid, 0)], 0.0)
+        push_ready(tasks[(cid, 0)], issue_times[group_of_chunk[cid]])
 
     def select_batch(dim: int, now: float) -> list[StageTask]:
         q = queues[dim]
@@ -165,9 +232,9 @@ def simulate(
             batch = [head[0]]
         else:
             if intra == "SCF":
-                q.sort(key=lambda t: (t.wire_bytes, t.arrival_seq))
+                q.sort(key=lambda t: (-t.priority, t.wire_bytes, t.arrival_seq))
             else:  # FIFO
-                q.sort(key=lambda t: t.arrival_seq)
+                q.sort(key=lambda t: (-t.priority, t.arrival_seq))
             batch = [q[0]]
         if fusion:
             bw = topology.dims[dim].aggr_bw_bytes
@@ -219,11 +286,13 @@ def simulate(
         dim_wire[dim] += wire
         for t in batch:
             dim_order[dim].append(t.op_id)
+        dim_services[dim].append(
+            (now, free_at, tuple(sorted({t.group for t in batch}))))
         # Chunk stages complete A after their data drains (latency term).
         heapq.heappush(events, (free_at, next(seq), "free", dim))
         heapq.heappush(events, (free_at + a, next(seq), "done", (dim, batch)))
 
-    makespan = 0.0
+    makespan = max(issue_times) if issue_times else 0.0
     while events:
         now, _, kind, payload = heapq.heappop(events)
         makespan = max(makespan, now)
@@ -245,12 +314,15 @@ def simulate(
                 nxt = (t.chunk_id, t.stage_idx + 1)
                 if nxt in tasks:
                     push_ready(tasks[nxt], now)
+                elif group_finish[t.group] < now:  # chunk chain retired
+                    group_finish[t.group] = now
 
     for dim in range(num_dims):
         if pending_since[dim] is not None:  # pragma: no cover - safety
             activity[dim].append((pending_since[dim], makespan))
 
-    return SimResult(makespan, dim_busy, dim_wire, activity, dim_order)
+    return SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
+                     dim_services, list(issue_times), group_finish)
 
 
 def simulate_scheduled(
@@ -277,3 +349,43 @@ def simulate_scheduled(
     )
     res = simulate(topology, [chunks], intra=intra, fusion=fusion)
     return res, chunks
+
+
+def simulate_requests(
+    topology: Topology,
+    requests: list[CollectiveRequest],
+    *,
+    policy: str = "themis",
+    chunks_per_collective: int = 64,
+    intra: str = "SCF",
+    fusion: bool = True,
+    water_filling: bool = False,
+) -> tuple[SimResult, list[list[Chunk]]]:
+    """Online entry point: schedule and simulate an arrival-time-aware
+    request stream.
+
+    Requests are scheduled in issue order through one ``ThemisScheduler``
+    whose Dim Load Tracker runs *across* requests (``schedule_request``), so
+    each collective's chunk orders account for the residual load of every
+    collective still in flight.  The returned chunk groups are indexed like
+    ``requests``; ``SimResult.group_issue``/``group_finish`` give each
+    request's service window.
+    """
+    from repro.core.scheduler import ThemisScheduler
+
+    lm = LatencyModel(topology)
+    sched = ThemisScheduler(lm, policy)
+    order = sorted(range(len(requests)), key=lambda i: (requests[i].issue_time, i))
+    groups: list[list[Chunk]] = [[] for _ in requests]
+    for i in order:
+        groups[i] = sched.schedule_request(
+            requests[i], chunks_per_collective, water_filling=water_filling)
+    res = simulate(
+        topology,
+        groups,
+        issue_times=[r.issue_time for r in requests],
+        priorities=[r.priority for r in requests],
+        intra=intra,
+        fusion=fusion,
+    )
+    return res, groups

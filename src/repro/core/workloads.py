@@ -25,8 +25,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core.latency_model import LatencyModel
-from repro.core.scheduler import ThemisScheduler
-from repro.core.simulator import simulate
+from repro.core.requests import CollectiveRequest
+from repro.core.simulator import SimResult, simulate_requests
 from repro.topology import NetworkDim, Topology
 
 A100_FP16_FLOPS = 312e12  # roofline FP16 (paper Sec. 5.1)
@@ -54,6 +54,9 @@ class Workload:
     compute_bwd_s: float
     comm_ops: list[CommOp] = field(default_factory=list)
     mp_npus: int = 1           # model-parallel group size (leading dims)
+    # Per-bucket gradient bytes, input->output order, for the overlap engine
+    # (None: buckets are equal splits of the fused DP collectives).
+    dp_buckets: list[float] | None = None
 
     @property
     def compute_s(self) -> float:
@@ -90,13 +93,15 @@ def make_resnet152(batch_per_npu: int = 32) -> Workload:
     """ResNet-152 pure-DP: one fused gradient AR at the end of bwd
     (Sec. 6.2: 'NPUs communicate their locally computed weight gradients
     through All-Reduce')."""
-    grad_bytes = sum(resnet152_param_buckets())  # ~120 MB fp16
+    buckets = resnet152_param_buckets()
+    grad_bytes = sum(buckets)                    # ~120 MB fp16
     flops_fwd = 11.58e9 * batch_per_npu          # 11.58 GFLOPs/img fwd
     return Workload(
         name="ResNet-152",
         compute_fwd_s=flops_fwd / A100_FP16_FLOPS,
         compute_bwd_s=2 * flops_fwd / A100_FP16_FLOPS,
         comm_ops=[CommOp("AR", grad_bytes, count=1, scope="dp", batched=True)],
+        dp_buckets=buckets,
     )
 
 
@@ -228,6 +233,23 @@ class IterationResult:
         return self.compute_s + self.exposed_dp_s + self.exposed_mp_s
 
 
+def _sim_request_stream(
+    topology: Topology,
+    requests: list[CollectiveRequest],
+    policy: str,
+    chunks_per_collective: int,
+    intra: str,
+) -> SimResult | None:
+    """Schedule + simulate an arrival-time-aware request stream (one
+    incremental scheduler across requests: Sec. 4.4's running-load view)."""
+    if topology.num_dims == 0 or not requests:
+        return None
+    res, _ = simulate_requests(
+        topology, requests, policy=policy,
+        chunks_per_collective=chunks_per_collective, intra=intra)
+    return res
+
+
 def _sim_stream(
     topology: Topology,
     ops: list[CommOp],
@@ -236,16 +258,67 @@ def _sim_stream(
     intra: str,
 ) -> float:
     """Simulate a batch of collectives issued together (one sync point)."""
-    if topology.num_dims == 0:
-        return 0.0
-    lm = LatencyModel(topology)
-    groups = []
-    for op in ops:
-        sched = ThemisScheduler(lm, policy)
-        groups.append(
-            sched.schedule_collective(op.collective, op.size_bytes, chunks_per_collective)
-        )
-    return simulate(topology, groups, intra=intra).makespan
+    reqs = [CollectiveRequest(op.collective, op.size_bytes) for op in ops]
+    res = _sim_request_stream(topology, reqs, policy, chunks_per_collective, intra)
+    return 0.0 if res is None else res.makespan
+
+
+def dp_bucket_requests(
+    workload: Workload, n_buckets: int, bwd_s: float | None = None
+) -> list[CollectiveRequest]:
+    """Backprop gradient-bucket stream for the overlap engine.
+
+    Buckets retire as back-propagation sweeps output->input, so bucket *i*
+    (of *n*, in retirement order) issues at ``bwd_s * (i+1)/n`` with t=0 the
+    start of the backward pass.  Gradient collectives (AR/RS) are bucketed;
+    ZeRO-style param All-Gathers depend on the optimizer step and issue at
+    the end of the backward pass.  Uses the workload's published per-tensor
+    bucket sizes when available (``dp_buckets``), else equal splits.
+    """
+    if bwd_s is None:
+        bwd_s = workload.compute_bwd_s
+    reqs: list[CollectiveRequest] = []
+    for op in workload.comm_ops:
+        if op.scope != "dp":
+            continue
+        if op.collective == "AG":
+            for _ in range(op.count):
+                reqs.append(CollectiveRequest(
+                    "AG", op.size_bytes, issue_time=bwd_s, stream="dp-ag"))
+            continue
+        for _ in range(op.count):
+            if workload.dp_buckets and op.batched:
+                # retirement order = reversed layer order, rescaled to the
+                # op's size (dp_buckets describe the full gradient set)
+                total = sum(workload.dp_buckets)
+                sizes = [b / total * op.size_bytes
+                         for b in reversed(workload.dp_buckets)]
+                sizes = _coalesce_buckets(sizes, n_buckets)
+            else:
+                sizes = [op.size_bytes / n_buckets] * n_buckets
+            n = len(sizes)
+            for i, b in enumerate(sizes):
+                reqs.append(CollectiveRequest(
+                    op.collective, b, issue_time=bwd_s * (i + 1) / n,
+                    stream="bwd-buckets"))
+    return reqs
+
+
+def _coalesce_buckets(sizes: list[float], n_buckets: int) -> list[float]:
+    """Greedily merge adjacent per-tensor sizes into ~n_buckets buckets,
+    preserving retirement order (mirrors DDP gradient bucketing)."""
+    if len(sizes) <= n_buckets:
+        return sizes
+    target = sum(sizes) / n_buckets
+    out: list[float] = []
+    acc = 0.0
+    for s in sizes:
+        acc += s
+        if acc >= target and len(out) < n_buckets - 1:
+            out.append(acc)
+            acc = 0.0
+    out.append(acc)
+    return [s for s in out if s > 0]
 
 
 def calibrate_compute(
@@ -299,8 +372,18 @@ def iteration_time(
     *,
     chunks_per_collective: int = 64,
     intra: str = "SCF",
+    overlap_buckets: int = 0,
 ) -> IterationResult:
-    """Total iteration latency = compute + exposed comm (paper Sec. 6.2)."""
+    """Total iteration latency = compute + exposed comm (paper Sec. 6.2).
+
+    ``overlap_buckets > 0`` enables the arrival-time-aware engine: DP
+    gradient collectives split into that many buckets issued progressively
+    during the backward pass (``dp_bucket_requests``), overlap with compute,
+    and contend with each other on shared dims; the exposed DP time is then
+    whatever communication drains *after* back-propagation finishes.  The
+    default (0) keeps the paper's one-sync-point model: everything issues
+    together at the end of the backward pass.
+    """
     mp_topo, dp_topo = split_topology(topology, workload.mp_npus)
     if policy == "ideal":
         dp_lm = LatencyModel(dp_topo) if dp_topo.num_dims else None
@@ -317,12 +400,24 @@ def iteration_time(
         )
         return IterationResult(workload.compute_s, exposed_dp, exposed_mp)
 
-    # DP collectives: all buckets ready at end of bwd -> one batched stream.
-    dp_ops = [o for o in workload.comm_ops if o.scope == "dp"]
-    dp_stream: list[CommOp] = []
-    for o in dp_ops:
-        dp_stream.extend([CommOp(o.collective, o.size_bytes)] * o.count)
-    exposed_dp = _sim_stream(dp_topo, dp_stream, policy, chunks_per_collective, intra)
+    if overlap_buckets > 0:
+        # Bucketed backprop stream: buckets issue as bwd retires them and
+        # only the tail that drains after bwd ends is exposed.
+        reqs = dp_bucket_requests(workload, overlap_buckets)
+        res = _sim_request_stream(dp_topo, reqs, policy,
+                                  chunks_per_collective, intra)
+        bwd_end = workload.compute_bwd_s
+        finish = max(res.group_finish) if res else bwd_end
+        exposed_dp = max(0.0, finish - bwd_end)
+    else:
+        # DP collectives: all buckets ready at end of bwd -> one batched
+        # stream at a single sync point.
+        dp_ops = [o for o in workload.comm_ops if o.scope == "dp"]
+        dp_stream: list[CommOp] = []
+        for o in dp_ops:
+            dp_stream.extend([CommOp(o.collective, o.size_bytes)] * o.count)
+        exposed_dp = _sim_stream(dp_topo, dp_stream, policy,
+                                 chunks_per_collective, intra)
 
     # MP collectives: on the layer critical path -> serialized, simulate one
     # instance and multiply by count.

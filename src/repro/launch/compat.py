@@ -1,0 +1,51 @@
+"""jax version-compat shims.
+
+The repo targets the newest jax APIs but must degrade gracefully on the
+installed toolchain (jax 0.4.37 in the image):
+
+  * ``jax.sharding.AxisType`` + the ``axis_types=`` kwarg of
+    ``jax.make_mesh`` only exist from jax 0.5; older versions get a plain
+    mesh (every axis behaves like the default/auto type).
+  * ``jax.make_mesh`` itself appeared in 0.4.35; even older versions fall
+    back to constructing ``Mesh`` from ``mesh_utils.create_device_mesh``.
+  * ``jax.shard_map`` (with ``check_vma=``) is jax >= 0.6; 0.4.x spells it
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep=``.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    AxisType = None
+
+
+def make_mesh_compat(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with auto axis types where the API supports them."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+
+    return Mesh(mesh_utils.create_device_mesh(shape), axes)
+
+
+def axis_size_compat(axis_name) -> "jax.Array | int":
+    """``jax.lax.axis_size`` (jax >= 0.6); 0.4.x derives it via psum(1)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across the 0.4 -> 0.6 API rename."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check)

@@ -6,18 +6,17 @@ device state.  Single pod: 16x16 = 256 chips ("data", "model"); multi-pod:
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.launch.compat import make_mesh_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def axis_sizes(mesh) -> dict[str, int]:

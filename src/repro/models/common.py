@@ -170,8 +170,11 @@ def naive_attention(
     if window > 0:
         mask &= kpos[None, :] > (qpos[:, None] - window)
     scores = jnp.where(mask[None, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    return jnp.einsum("bhst,bthd->bshd", probs, v)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fp32 prob-value contraction: keeps decode (this path) bit-consistent
+    # with the blockwise fp32 accumulation of flash_attention_xla.
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
 
 
 def _flash_blocks(q, k, v, block_q, block_k):
@@ -227,8 +230,8 @@ def _flash_fwd_impl(q, k, v, q_offset, causal, window, block_q, block_k):
             corr = jnp.exp(m - m_new)
             l_new = l * corr + p.sum(-1)
             acc_new = acc * corr[..., None] + jnp.einsum(
-                "bhqk,bkhd->bhqd", p.astype(vr.dtype), vr
-            ).astype(jnp.float32)
+                "bhqk,bkhd->bhqd", p, vr.astype(jnp.float32)
+            )
             return (m_new, l_new, acc_new), None
 
         init = (

@@ -26,6 +26,7 @@ from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.compat import axis_size_compat, shard_map_compat
 from repro.comms.hierarchical import (
     _quantize,
     chunked_all_gather,
@@ -126,7 +127,7 @@ def _local_shard(y: jax.Array, order: tuple[str, ...]) -> jax.Array:
     """This device's nested block of a replicated chunk (zero-comm slicing
     matching the psum_scatter ownership for the given axis order)."""
     for ax in order:
-        a = jax.lax.axis_size(ax)
+        a = axis_size_compat(ax)
         i = jax.lax.axis_index(ax)
         ln = y.shape[0] // a
         y = jax.lax.dynamic_slice(y, (i * ln,), (ln,))
@@ -205,13 +206,13 @@ def make_themis_train_step(
                 {"loss": loss, "gnorm": gnorm, "lr": lr})
 
     err_spec = P(dp_axes, None) if use_int8 else P()
-    shard_step = jax.shard_map(
+    shard_step = shard_map_compat(
         step_shard,
         mesh=mesh,
         in_specs=(P(), shard_spec, shard_spec, shard_spec, P(), err_spec,
                   P(dp_axes)),
         out_specs=(P(), shard_spec, shard_spec, shard_spec, P(), err_spec, P()),
-        check_vma=False,
+        check=False,
     )
 
     def step(params, opt_state, batch):
@@ -233,8 +234,8 @@ def make_themis_train_step(
                               for i in range(n_chunks)])
 
         master = jax.jit(
-            jax.shard_map(build_master, mesh=mesh, in_specs=P(),
-                          out_specs=shard_spec, check_vma=False)
+            shard_map_compat(build_master, mesh=mesh, in_specs=P(),
+                          out_specs=shard_spec, check=False)
         )(flat)
         zeros = jnp.zeros_like(master)
         if use_int8:

@@ -1,0 +1,83 @@
+"""Minimal stand-in for the subset of hypothesis the suite uses.
+
+The container image does not ship ``hypothesis`` (see requirements-dev.txt
+for the real dependency).  This shim keeps the property tests running as
+deterministic randomized sweeps: ``@given`` draws ``max_examples`` samples
+from a seeded PRNG, so failures are reproducible, though without
+hypothesis's shrinking or adaptive search.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def sample(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def composite(fn):
+    """``@st.composite``: the wrapped fn's first arg is ``draw``."""
+
+    @functools.wraps(fn)
+    def builder(*args, **kw):
+        return _Strategy(lambda r: fn(lambda strat: strat.sample(r), *args, **kw))
+
+    return builder
+
+
+class strategies:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+    composite = staticmethod(composite)
+
+
+def settings(max_examples: int = 10, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        n = getattr(fn, "_shim_max_examples", 10)
+
+        def runner():
+            rnd = random.Random(0xC0FFEE)
+            for _ in range(n):
+                args = [s.sample(rnd) for s in arg_strats]
+                kw = {k: s.sample(rnd) for k, s in kw_strats.items()}
+                fn(*args, **kw)
+
+        # intentionally not functools.wraps: pytest must see a zero-arg
+        # signature, or it treats the strategy params as fixtures
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return deco

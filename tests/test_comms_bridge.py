@@ -5,6 +5,7 @@ from repro.comms.schedule_bridge import (
     collective_stats,
     predicted_axis_loads,
     themis_axis_orders,
+    themis_axis_orders_stream,
     topology_from_axes,
 )
 
@@ -43,6 +44,46 @@ def test_themis_orders_balance_loads():
 def test_single_axis_degenerates():
     orders = themis_axis_orders({"data": 8}, 1e9, 4, "themis")
     assert all(o == ("data",) for o in orders)
+
+
+def test_stream_orders_see_residual_loads():
+    """Bucket k's orders are scheduled against buckets 0..k-1's residual
+    loads: back-to-back buckets produce valid per-bucket permutations and
+    the later bucket's leading-axis mix differs from an isolated schedule
+    of the same bytes (the residual-load signature)."""
+    n = 16
+    per_bucket = themis_axis_orders_stream(AXES, [4e9, 4e9], n, "themis")
+    assert len(per_bucket) == 2
+    for orders in per_bucket:
+        assert len(orders) == n
+        for o in orders:
+            assert sorted(o) == sorted(AXES)  # permutation of all axes
+    fresh = themis_axis_orders(AXES, 4e9, n, "themis")
+
+    def lead_counts(orders):
+        out = {}
+        for o in orders:
+            out[o[0]] = out.get(o[0], 0) + 1
+        return out
+
+    assert lead_counts(per_bucket[1]) != lead_counts(fresh)
+
+
+def test_stream_unsorted_issue_times_schedule_in_issue_order():
+    """Out-of-order issue_times must not corrupt the running clock: the
+    t=0 bucket is scheduled first (fresh tracker) even when listed last."""
+    n = 8
+    got = themis_axis_orders_stream(AXES, [4e9, 4e9], n, "themis",
+                                    issue_times=[10.0, 0.0])
+    want_first = themis_axis_orders(AXES, 4e9, n, "themis")
+    assert got[1] == want_first  # t=0 bucket saw an empty fabric
+    assert len(got[0]) == n
+
+
+def test_stream_baseline_static():
+    per_bucket = themis_axis_orders_stream(AXES, [1e9, 1e9], 4, "baseline")
+    for orders in per_bucket:
+        assert all(o == ("model", "data", "pod") for o in orders)
 
 
 SAMPLE_HLO = """

@@ -11,6 +11,10 @@ import pytest
 from repro.configs import ShapeConfig, get_arch, list_archs
 from repro.models import build_model
 
+# Per-arch compiles dominate suite wall time; the fast tier-1 gate skips
+# them (pytest -m 'not slow'); the full gate still runs everything.
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 SMOKE = ShapeConfig("smoke", 48, 2, "train")
 

@@ -10,6 +10,7 @@ HERE = os.path.dirname(__file__)
 REPO = os.path.dirname(HERE)
 
 
+@pytest.mark.slow
 @pytest.mark.timeout(900)
 def test_multidevice_suite():
     env = dict(os.environ)

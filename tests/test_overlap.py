@@ -1,0 +1,171 @@
+"""Arrival-time-aware multi-collective engine tests.
+
+Covers the online request API: staggered issue times, contention between
+in-flight collectives, wire-byte conservation, the incremental
+running-load scheduler path, and priority tie-breaking.
+"""
+import pytest
+
+from repro.core.latency_model import LatencyModel
+from repro.core.requests import CollectiveRequest
+from repro.core.scheduler import ThemisScheduler
+from repro.core.simulator import simulate, simulate_requests
+from repro.topology import make_table2_topologies
+
+TOPOS = make_table2_topologies()
+TOPO2D = TOPOS["2D-SW_SW"]
+MB = 1e6
+
+
+def _solo_makespan(topo, req, policy, intra):
+    res, _ = simulate_requests(topo, [req], policy=policy, intra=intra,
+                               chunks_per_collective=16)
+    return res.makespan
+
+
+@pytest.mark.parametrize("policy,intra", [("baseline", "FIFO"),
+                                          ("themis", "SCF")])
+def test_staggered_collectives_contend_on_2d(policy, intra):
+    """Two staggered collectives on a 2-dim topology: the joint makespan is
+    strictly larger than either alone (shared dims serialize some work),
+    and wire bytes are conserved, under both FIFO and SCF."""
+    lm = LatencyModel(TOPO2D)
+    first = CollectiveRequest("AR", 200 * MB, issue_time=0.0)
+    solo1 = _solo_makespan(TOPO2D, first, policy, intra)
+    # issue the second while the first is mid-flight
+    second = CollectiveRequest("AR", 200 * MB, issue_time=0.3 * solo1)
+    solo2 = _solo_makespan(TOPO2D, second, policy, intra)
+
+    res, groups = simulate_requests(TOPO2D, [first, second], policy=policy,
+                                    intra=intra, chunks_per_collective=16)
+    assert res.makespan > solo1
+    assert res.makespan > solo2
+    # per-dim wire-byte totals are conserved across the joint run
+    want_total = 2 * lm.total_wire_bytes("AR", 200 * MB)
+    assert sum(res.dim_wire_bytes) == pytest.approx(want_total, rel=1e-9)
+    # both requests complete, in a window consistent with their issue times
+    assert res.group_finish[0] >= res.group_issue[0]
+    assert res.group_finish[1] >= second.issue_time
+    assert all(len(g) == 16 for g in groups)
+
+
+def test_perdim_wire_conservation_vs_solo_baseline():
+    """Under the static baseline schedule the per-dim byte placement is
+    schedule-invariant, so the joint run's per-dim wire bytes equal the sum
+    of the two solo runs' per-dim wire bytes exactly."""
+    a = CollectiveRequest("AR", 150 * MB, issue_time=0.0)
+    b = CollectiveRequest("AR", 90 * MB, issue_time=1e-4)
+    ra, _ = simulate_requests(TOPO2D, [a], policy="baseline", intra="FIFO")
+    rb, _ = simulate_requests(TOPO2D, [b], policy="baseline", intra="FIFO")
+    rj, _ = simulate_requests(TOPO2D, [a, b], policy="baseline", intra="FIFO")
+    for k in range(TOPO2D.num_dims):
+        assert rj.dim_wire_bytes[k] == pytest.approx(
+            ra.dim_wire_bytes[k] + rb.dim_wire_bytes[k], rel=1e-9)
+
+
+def test_no_service_before_issue_time():
+    req = CollectiveRequest("AR", 64 * MB, issue_time=0.005)
+    res, _ = simulate_requests(TOPO2D, [req], policy="themis", intra="SCF")
+    for k in range(TOPO2D.num_dims):
+        for start, _end, _groups in res.dim_services[k]:
+            assert start >= req.issue_time
+    assert res.group_finish[0] > req.issue_time
+    assert res.makespan >= req.issue_time
+
+
+def test_issue_times_default_matches_legacy_t0():
+    """simulate() without issue_times behaves exactly as all-issued-at-0."""
+    sched = ThemisScheduler(LatencyModel(TOPO2D), "themis")
+    g1 = sched.schedule_collective("AR", 100 * MB, 8)
+    sched2 = ThemisScheduler(LatencyModel(TOPO2D), "themis")
+    g2 = sched2.schedule_collective("AR", 100 * MB, 8)
+    r_default = simulate(TOPO2D, [g1, g2], intra="SCF")
+    r_zeros = simulate(TOPO2D, [g1, g2], issue_times=[0.0, 0.0], intra="SCF")
+    assert r_default.makespan == pytest.approx(r_zeros.makespan, rel=1e-12)
+    assert r_default.dim_wire_bytes == r_zeros.dim_wire_bytes
+
+
+def test_fig12_style_bucket_stream_interleaves():
+    """Calibrated (comm-bound) ResNet-152 bucket stream: per-dim service
+    intervals from distinct bucket collectives interleave — real
+    contention, not back-to-back execution."""
+    from repro.core.workloads import (
+        ALL_WORKLOADS,
+        calibrate_compute,
+        dp_bucket_requests,
+        split_topology,
+    )
+
+    w = ALL_WORKLOADS["resnet152"]()
+    calibrate_compute(w, list(TOPOS.values()), 1.54)
+    for tname in ("2D-SW_SW", "3D-SW_SW_SW_homo"):
+        _, dp_topo = split_topology(TOPOS[tname], w.mp_npus)
+        reqs = dp_bucket_requests(w, 8)
+        assert len(reqs) == 8
+        assert all(r.issue_time <= w.compute_bwd_s for r in reqs)
+        for policy, intra in (("baseline", "FIFO"), ("themis", "SCF")):
+            res, _ = simulate_requests(dp_topo, reqs, policy=policy,
+                                       intra=intra, chunks_per_collective=64)
+            assert any(res.groups_interleave_on(k)
+                       for k in range(dp_topo.num_dims)), (tname, policy)
+
+
+def test_overlap_iteration_time_hides_comm():
+    """Bucketed overlap can only help: exposed DP comm with buckets issued
+    during bwd is <= the single-sync-point exposure."""
+    from repro.core.workloads import ALL_WORKLOADS, iteration_time
+
+    w = ALL_WORKLOADS["resnet152"]()
+    for tname in ("2D-SW_SW", "3D-SW_SW_SW_homo"):
+        topo = TOPOS[tname]
+        sync = iteration_time(w, topo, "themis", intra="SCF")
+        over = iteration_time(w, topo, "themis", intra="SCF",
+                              overlap_buckets=8)
+        assert over.exposed_dp_s <= sync.exposed_dp_s * 1.05
+        assert over.total_s <= sync.total_s * 1.05
+
+
+def test_schedule_request_keeps_running_loads():
+    """The incremental path accumulates residual loads across requests
+    instead of resetting, and drains them as the clock advances."""
+    lm = LatencyModel(TOPO2D)
+    sched = ThemisScheduler(lm, "themis")
+    sched.schedule_request(CollectiveRequest("AR", 200 * MB, issue_time=0.0), 8)
+    loads_mid = sched.tracker.get_loads()
+    assert max(loads_mid) > max(lm.fixed_delay(k, "AR")
+                                for k in range(TOPO2D.num_dims))
+    # a request far in the future sees fully-drained dims (just its own A_K)
+    sched.schedule_request(
+        CollectiveRequest("RS", 1.0, issue_time=1e6), 1)
+    drained = sched.tracker.get_loads()
+    for k in range(TOPO2D.num_dims):
+        assert drained[k] <= lm.fixed_delay(k, "RS") + lm.wire_time(k, 1.0) + 1e-12
+
+
+def test_back_to_back_requests_accumulate_loads():
+    lm = LatencyModel(TOPO2D)
+    sched = ThemisScheduler(lm, "themis")
+    sched.schedule_request(CollectiveRequest("AR", 100 * MB), 8)
+    l1 = sum(sched.tracker.get_loads())
+    sched.schedule_request(CollectiveRequest("AR", 100 * MB), 8)
+    l2 = sum(sched.tracker.get_loads())
+    assert l2 > l1  # no reset between requests
+
+
+def test_priority_preempts_equal_size_request():
+    """With equal sizes and issue times, the higher-priority request is
+    served first within each dim's queue and finishes no later."""
+    hi = CollectiveRequest("AR", 100 * MB, priority=1)
+    lo = CollectiveRequest("AR", 100 * MB, priority=0)
+    res, _ = simulate_requests(TOPO2D, [lo, hi], policy="baseline",
+                               intra="FIFO", chunks_per_collective=8)
+    assert res.group_finish[1] <= res.group_finish[0]
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        CollectiveRequest("broadcast", 1e6)
+    with pytest.raises(ValueError):
+        CollectiveRequest("AR", -1.0)
+    with pytest.raises(ValueError):
+        CollectiveRequest("AR", 1e6, issue_time=-0.1)

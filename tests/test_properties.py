@@ -1,7 +1,14 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Falls back to the deterministic sweep shim when hypothesis is missing
+(see requirements-dev.txt / tests/_hypothesis_shim.py).
+"""
 import math
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.latency_model import LatencyModel
 from repro.core.scheduler import schedule_collective
