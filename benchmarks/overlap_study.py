@@ -40,13 +40,16 @@ def run():
                                      policy=policy, intra=intra,
                                      chunks_per_collective=64)
                 us_tot += us
-                makespan = max(res.group_finish)
+                stats = res.stream_stats()  # per-stream aggregation
+                makespan = max(s.finish for s in stats.values())
                 exposed = max(0.0, makespan - bwd)
                 inter = sum(res.groups_interleave_on(k)
                             for k in range(dp_topo.num_dims))
+                bucket_lat = stats["bwd-buckets"].latency_mean
                 per_policy.append(
                     f"{policy}: makespan={makespan*1e3:.3f}ms "
                     f"exposed={exposed*1e3:.3f}ms "
+                    f"bucket_lat={bucket_lat*1e3:.3f}ms "
                     f"interleaved_dims={inter}/{dp_topo.num_dims}")
             rows.append(row(
                 f"overlap/{tname}/buckets={nb}", us_tot / len(POLICIES),

@@ -19,6 +19,7 @@ def main() -> None:
         insights_study,
         overlap_study,
         roofline_table,
+        tenancy_study,
     )
     from benchmarks.common import print_rows
 
@@ -29,6 +30,7 @@ def main() -> None:
         ("fig11", fig11_utilization),
         ("fig12", fig12_workloads),
         ("overlap", overlap_study),
+        ("tenancy", tenancy_study),
         ("insights", insights_study),
         ("beyond", beyond_paper),
         ("roofline", roofline_table),

@@ -1,0 +1,179 @@
+"""Multi-tenant fabric study: tenants x arbiter policies x topologies.
+
+Three experiments on shared Table-2 fabrics:
+
+  * **fairness** — an asymmetric pair (a heavy batch tenant issuing few
+    huge All-Reduces vs. a light latency-sensitive tenant issuing many
+    small ones) swept over the inter-tenant arbiter policies.  Reports
+    per-tenant slowdown vs. running alone, Jain's fairness index over
+    slowdowns, SLO violations, and preemption counts — `weighted-fair`
+    should beat `fifo` on Jain everywhere.
+  * **workloads** — the same sweep with real training tenants
+    (ResNet-152 bucket stream vs. GNMT) built from ``TenantJob``.
+  * **tracker ablation** — three staggered tenants under the
+    `weighted-fair` arbiter, scheduled by the cross-tenant Themis with one
+    *shared* fabric-wide Dim Load Tracker vs. blind *per-tenant* trackers.
+
+Emits ``BENCH_tenancy.json`` at the repo root (machine-readable perf
+trajectory) plus the usual CSV rows.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import row, timed
+from repro.core.workloads import make_gnmt, make_resnet152
+from repro.tenancy import (
+    FabricArbiter,
+    TenantJob,
+    TenantSpec,
+    fairness_index,
+    isolated_latencies,
+    mean_slowdown,
+    simulate_fabric,
+    slo_violations,
+    synthetic_requests,
+    tenant_reports,
+)
+from repro.topology import make_table2_topologies
+
+MB = 1e6
+TOPO_NAMES = ("2D-SW_SW", "3D-SW_SW_SW_homo", "3D-SW_SW_SW_hetero")
+POLICIES = ("fifo", "strict-priority", "weighted-fair", "slo-aware")
+CHUNKS = 16
+OUT_JSON = Path(__file__).resolve().parents[1] / "BENCH_tenancy.json"
+
+
+def _fairness_tenants():
+    specs = [
+        TenantSpec("batch", weight=1.0),
+        TenantSpec("prod", weight=1.0, priority=1, slo_slowdown=1.5),
+    ]
+    reqs = (synthetic_requests("batch", "AR", 400 * MB, 3)
+            + synthetic_requests("prod", "AR", 10 * MB, 12,
+                                 gap_s=0.0005, start_s=0.0002))
+    return specs, reqs
+
+
+def _workload_tenants():
+    light = TenantJob(
+        TenantSpec("resnet", weight=1.0, priority=1, slo_slowdown=2.0,
+                   arrival_offset_s=0.005, iterations=2, n_buckets=8),
+        make_resnet152())
+    heavy = TenantJob(
+        TenantSpec("gnmt", weight=1.0, iterations=2, n_buckets=2),
+        make_gnmt())
+    specs = [light.spec, heavy.spec]
+    return specs, light.requests() + heavy.requests()
+
+
+def _ablation_tenants(stagger: float = 0.001):
+    specs = [TenantSpec(n) for n in ("a", "b", "c")]
+    reqs = []
+    for i, s in enumerate(specs):
+        reqs += synthetic_requests(s.name, "AR", 200 * MB, 3,
+                                   gap_s=3 * stagger, start_s=i * stagger)
+    return specs, reqs
+
+
+def _policy_cell(topo, reqs, specs, iso, policy):
+    spec_map = {s.name: s for s in specs}
+    iso_mean = {t: sum(v) / len(v) for t, v in iso.items()}
+    arb = FabricArbiter(policy, specs, isolated_latency=iso_mean)
+    (res, _), us = timed(simulate_fabric, topo, reqs, arbiter=arb,
+                         chunks_per_collective=CHUNKS)
+    reps = tenant_reports(res, reqs, iso, spec_map)
+    return us, {
+        "jain": fairness_index(reps),
+        "mean_slowdown": mean_slowdown(reps),
+        "makespan_ms": res.finish_time() * 1e3,
+        "slo_violations": slo_violations(reps),
+        "preemptions": arb.preempt_count,
+        "tenants": {
+            t: {"mean_slowdown": r.mean_slowdown,
+                "finish_ms": r.finish_s * 1e3,
+                "bw_share": r.bw_share,
+                "slo_violated": r.slo_violated}
+            for t, r in reps.items()
+        },
+    }
+
+
+def _sweep(topo, scenario_fn):
+    specs, reqs = scenario_fn()
+    iso = isolated_latencies(topo, reqs, chunks_per_collective=CHUNKS)
+    cells = {}
+    us_tot = 0.0
+    for policy in POLICIES:
+        us, cell = _policy_cell(topo, reqs, specs, iso, policy)
+        us_tot += us
+        cells[policy] = cell
+    return us_tot / len(POLICIES), cells
+
+
+def _ablation(topo):
+    specs, reqs = _ablation_tenants()
+    spec_map = {s.name: s for s in specs}
+    iso = isolated_latencies(topo, reqs, chunks_per_collective=32)
+    out = {}
+    us_tot = 0.0
+    for mode, shared in (("shared", True), ("per_tenant", False)):
+        arb = FabricArbiter("weighted-fair", specs)
+        (res, _), us = timed(simulate_fabric, topo, reqs, arbiter=arb,
+                             shared_tracker=shared, chunks_per_collective=32)
+        us_tot += us
+        reps = tenant_reports(res, reqs, iso, spec_map)
+        out[mode] = {"makespan_ms": res.finish_time() * 1e3,
+                     "mean_slowdown": mean_slowdown(reps)}
+    out["shared_wins"] = (
+        out["shared"]["makespan_ms"] < out["per_tenant"]["makespan_ms"]
+        or out["shared"]["mean_slowdown"] < out["per_tenant"]["mean_slowdown"])
+    return us_tot / 2, out
+
+
+def run():
+    topos = make_table2_topologies()
+    rows = []
+    report: dict = {"scenarios": {}, "checks": {}}
+    wf_beats_fifo: list[str] = []
+    shared_wins: list[str] = []
+    for tname in TOPO_NAMES:
+        topo = topos[tname]
+        trep: dict = {}
+        for scen, fn in (("fairness", _fairness_tenants),
+                         ("workloads", _workload_tenants)):
+            us, cells = _sweep(topo, fn)
+            trep[scen] = cells
+            for policy, c in cells.items():
+                rows.append(row(
+                    f"tenancy/{tname}/{scen}/{policy}", us,
+                    f"jain={c['jain']:.4f} mean_sd={c['mean_slowdown']:.3f} "
+                    f"makespan={c['makespan_ms']:.3f}ms "
+                    f"slo_viol={c['slo_violations']} "
+                    f"preempts={c['preemptions']}"))
+            if scen == "fairness" and (cells["weighted-fair"]["jain"]
+                                       > cells["fifo"]["jain"]):
+                wf_beats_fifo.append(tname)
+        us, abl = _ablation(topo)
+        trep["tracker_ablation"] = abl
+        if abl["shared_wins"]:
+            shared_wins.append(tname)
+        rows.append(row(
+            f"tenancy/{tname}/tracker_ablation", us,
+            f"shared: makespan={abl['shared']['makespan_ms']:.3f}ms "
+            f"mean_sd={abl['shared']['mean_slowdown']:.3f} | per-tenant: "
+            f"makespan={abl['per_tenant']['makespan_ms']:.3f}ms "
+            f"mean_sd={abl['per_tenant']['mean_slowdown']:.3f} | "
+            f"shared_wins={abl['shared_wins']}"))
+        report["scenarios"][tname] = trep
+    report["checks"]["weighted_fair_beats_fifo_jain_on"] = wf_beats_fifo
+    report["checks"]["shared_tracker_wins_on"] = shared_wins
+    OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
+    rows.append(row(
+        "tenancy/checks", 0.0,
+        f"weighted-fair>fifo jain on {len(wf_beats_fifo)}/{len(TOPO_NAMES)} "
+        f"topologies {wf_beats_fifo}; shared tracker wins on "
+        f"{len(shared_wins)}/{len(TOPO_NAMES)} {shared_wins}; "
+        f"json={OUT_JSON.name}"))
+    return rows

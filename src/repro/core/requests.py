@@ -18,7 +18,10 @@ class CollectiveRequest:
 
     ``priority`` breaks intra-dimension service ties (higher serves first);
     ``stream`` is a free-form tag identifying the issuing stream (e.g.
-    "bwd-buckets", "mp-critical-path", a tenant id) used for reporting.
+    "bwd-buckets", "mp-critical-path") used for reporting; ``tenant``
+    identifies the job the request belongs to on a shared fabric — the
+    :class:`repro.tenancy.FabricArbiter` arbitrates service between tenants
+    and per-tenant metrics aggregate over it.
     """
 
     collective: str            # 'AR' | 'RS' | 'AG'
@@ -26,6 +29,7 @@ class CollectiveRequest:
     issue_time: float = 0.0
     priority: int = 0
     stream: str = "default"
+    tenant: str = "default"
 
     def __post_init__(self):
         if self.collective not in ("AR", "RS", "AG"):

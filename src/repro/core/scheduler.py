@@ -64,15 +64,24 @@ def _sorted_dims(loads: Sequence[float], descending: bool) -> list[int]:
 
 @dataclass
 class ThemisScheduler:
-    """Implements SCHEDULE_COLLECTIVE / SCHEDULER.SCHEDULE of Algorithm 1."""
+    """Implements SCHEDULE_COLLECTIVE / SCHEDULER.SCHEDULE of Algorithm 1.
+
+    ``tracker`` may be supplied to share one Dim Load Tracker between
+    several scheduler instances — the cross-tenant Themis mode
+    (``repro.tenancy``) gives every tenant's scheduler the same fabric-wide
+    tracker so each tenant's chunk orders steer around *other tenants'*
+    residual loads, not just their own.
+    """
 
     latency_model: LatencyModel
     policy: str = "themis"
+    tracker: DimLoadTracker | None = None
 
     def __post_init__(self):
         if self.policy not in POLICIES:
             raise ValueError(f"unknown policy {self.policy!r}; want {POLICIES}")
-        self.tracker = DimLoadTracker(self.latency_model)
+        if self.tracker is None:
+            self.tracker = DimLoadTracker(self.latency_model)
 
     # -- public API -----------------------------------------------------------
     def schedule_collective(

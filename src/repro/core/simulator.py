@@ -26,6 +26,16 @@ is the high-level entry: a stream of :class:`CollectiveRequest`s is
 scheduled incrementally (``ThemisScheduler.schedule_request``, which keeps
 the Dim Load Tracker running across requests) and simulated jointly.
 
+Multi-tenant fabrics plug in through an *arbiter* (duck-typed; see
+``repro.tenancy.FabricArbiter``): when present it replaces the per-dim
+queue discipline (inter-tenant policies such as weighted-fair or
+strict-priority), batches same-tenant chunks into multi-chunk services,
+and may **preempt** an in-flight multi-chunk service at chunk granularity —
+chunks whose data has not started draining are returned to the ready queue
+so a higher-share tenant does not wait behind a 1 GB collective.  Byte
+conservation holds across preemptions: every chunk stage is eventually
+served exactly once.
+
 Outputs makespan, per-dim busy time / wire bytes, BW utilization (the
 paper's weighted-average metric), per-dim activity timelines (Fig. 9),
 per-request completion times, and per-dim service logs attributing every
@@ -59,10 +69,36 @@ class StageTask:
     priority: int = 0
     arrival_seq: int = 0
     ready_time: float = 0.0
+    tenant: str = "default"
 
     @property
     def op_id(self) -> OpId:
         return (self.chunk_id, self.stage_idx)
+
+
+@dataclass
+class _Service:
+    """One in-flight batch on a dimension — the unit of preemption."""
+
+    sid: int                   # event validity token; bumped on preemption
+    dim: int
+    start: float
+    end: float
+    rate: float                # effective drain rate, bytes/s (incl. jitter)
+    batch: list[StageTask]
+    svc_idx: int               # index of this service in dim_services[dim]
+
+
+@dataclass(frozen=True)
+class StreamStats:
+    """Aggregate metrics of one request stream (or tenant)."""
+
+    n: int                     # number of requests carrying the tag
+    issue_first: float         # earliest issue time
+    finish: float              # latest finish time
+    latency_mean: float        # mean issue-to-finish latency
+    latency_max: float
+    wire_bytes: float          # total wire bytes moved for the tag
 
 
 @dataclass
@@ -76,6 +112,10 @@ class SimResult:
     dim_services: list[list[ServiceInterval]] = field(default_factory=list)
     group_issue: list[float] = field(default_factory=list)
     group_finish: list[float] = field(default_factory=list)
+    # -- per-group tags / attribution (populated by simulate_requests) -------
+    group_streams: list[str] = field(default_factory=list)
+    group_tenants: list[str] = field(default_factory=list)
+    group_wire_bytes: list[float] = field(default_factory=list)
 
     def avg_bw_utilization(self, topology: Topology) -> float:
         """Weighted average BW utilization (weights = per-dim BW budget)."""
@@ -93,6 +133,46 @@ class SimResult:
     def group_span(self, group: int) -> float:
         """Issue-to-completion latency of one collective."""
         return self.group_finish[group] - self.group_issue[group]
+
+    def _group_tags(self, by: str) -> list[str]:
+        if by == "tenant":
+            tags = self.group_tenants
+        elif by == "stream":
+            tags = self.group_streams
+        else:
+            raise ValueError(f"by must be 'stream' or 'tenant', got {by!r}")
+        if not tags:  # plain simulate() call without request tags
+            tags = ["default"] * len(self.group_finish)
+        return tags
+
+    def stream_stats(self, by: str = "stream") -> dict[str, StreamStats]:
+        """Aggregate per-stream (or per-tenant, ``by='tenant'``) metrics:
+        finish time, issue-to-finish latency, and wire bytes moved."""
+        tags = self._group_tags(by)
+        members: dict[str, list[int]] = {}
+        for g, tag in enumerate(tags):
+            members.setdefault(tag, []).append(g)
+        wire = self.group_wire_bytes or [0.0] * len(tags)
+        out: dict[str, StreamStats] = {}
+        for tag, gs in members.items():
+            lat = [self.group_finish[g] - self.group_issue[g] for g in gs]
+            out[tag] = StreamStats(
+                n=len(gs),
+                issue_first=min(self.group_issue[g] for g in gs),
+                finish=max(self.group_finish[g] for g in gs),
+                latency_mean=sum(lat) / len(lat),
+                latency_max=max(lat),
+                wire_bytes=sum(wire[g] for g in gs),
+            )
+        return out
+
+    def stream_finish(self, tag: str, by: str = "stream") -> float:
+        """Finish time of the last request carrying ``tag``."""
+        return self.stream_stats(by)[tag].finish
+
+    def finish_time(self) -> float:
+        """Finish time of the last request (drain point of all streams)."""
+        return max(self.group_finish) if self.group_finish else self.makespan
 
     def groups_interleave_on(self, dim: int) -> bool:
         """True if the service order on ``dim`` switches between distinct
@@ -118,6 +198,7 @@ def _build_tasks(
     id_offset: int = 0,
     group: int = 0,
     priority: int = 0,
+    tenant: str = "default",
 ) -> dict[OpId, StageTask]:
     tasks: dict[OpId, StageTask] = {}
     for chunk in chunks:
@@ -133,6 +214,7 @@ def _build_tasks(
                 fixed_delay=latency_model.step_delay(dim, phase),
                 group=group,
                 priority=priority,
+                tenant=tenant,
             )
     return tasks
 
@@ -149,6 +231,9 @@ def simulate(
     enforced_order: list[list[OpId]] | None = None,
     jitter: float = 0.0,
     seed: int = 0,
+    tenants: list[str] | None = None,
+    streams: list[str] | None = None,
+    arbiter=None,
 ) -> SimResult:
     """Simulate one or more collectives (``chunk_groups``).
 
@@ -163,6 +248,15 @@ def simulate(
         (Sec. 4.6.2); a dim idles rather than serving out of turn.
     ``jitter``: multiplicative service-time noise amplitude (consistency
         experiments; deterministic given ``seed``).
+    ``tenants``/``streams``: per-group tags for multi-tenant attribution
+        (``SimResult.stream_stats``).
+    ``arbiter``: inter-tenant queue discipline + preemption policy (see
+        ``repro.tenancy.FabricArbiter``).  When set it replaces the
+        ``intra`` ordering, batches same-tenant chunks into multi-chunk
+        services (up to ``arbiter.quantum_chunks``), and — if
+        ``arbiter.preemption`` — may split an in-flight service at chunk
+        granularity, requeueing chunks whose data has not started draining.
+        Mutually exclusive with ``enforced_order``.
     """
     import random
 
@@ -176,13 +270,24 @@ def simulate(
         priorities = [0] * n_groups
     if len(issue_times) != n_groups or len(priorities) != n_groups:
         raise ValueError("issue_times/priorities must match chunk_groups")
+    if tenants is None:
+        tenants = ["default"] * n_groups
+    if streams is None:
+        streams = ["default"] * n_groups
+    if len(tenants) != n_groups or len(streams) != n_groups:
+        raise ValueError("tenants/streams must match chunk_groups")
+    if arbiter is not None and enforced_order is not None:
+        raise ValueError("arbiter and enforced_order are mutually exclusive")
 
     tasks: dict[OpId, StageTask] = {}
     group_of_chunk: dict[int, int] = {}
+    group_wire = [0.0] * n_groups
     offset = 0
     for g, group in enumerate(chunk_groups):
-        tasks.update(_build_tasks(lm, group, id_offset=offset, group=g,
-                                  priority=priorities[g]))
+        built = _build_tasks(lm, group, id_offset=offset, group=g,
+                             priority=priorities[g], tenant=tenants[g])
+        tasks.update(built)
+        group_wire[g] += sum(t.wire_bytes for t in built.values())
         for c in group:
             group_of_chunk[c.index + offset] = g
         if group:
@@ -205,6 +310,11 @@ def simulate(
     group_finish = [t for t in issue_times]  # empty groups finish at issue
     seq = itertools.count()
 
+    # In-flight services, keyed by validity token (sid).  Preemption bumps a
+    # service's sid so its already-scheduled free/done events become stale.
+    services: dict[int, _Service] = {}
+    inflight: list[_Service | None] = [None] * num_dims
+
     # Event heap: (time, tiebreak, kind, payload)
     events: list[tuple[float, int, str, object]] = []
 
@@ -220,6 +330,21 @@ def simulate(
         q = queues[dim]
         if not q:
             return []
+        if arbiter is not None:
+            # Inter-tenant discipline: the arbiter orders the ready queue;
+            # same-tenant chunks batch into one multi-chunk (preemptible)
+            # service up to the arbiter's quantum.
+            q.sort(key=lambda t: arbiter.order_key(t, dim, now))
+            batch = [q[0]]
+            limit = max(1, getattr(arbiter, "quantum_chunks", 1))
+            for t in q[1:]:
+                if len(batch) >= limit:
+                    break
+                if t.tenant == batch[0].tenant:
+                    batch.append(t)
+            for t in batch:
+                q.remove(t)
+            return batch
         if enforced_order is not None:
             order = enforced_order[dim]
             pos = enforced_pos[dim]
@@ -286,43 +411,111 @@ def simulate(
         dim_wire[dim] += wire
         for t in batch:
             dim_order[dim].append(t.op_id)
+        svc = _Service(
+            sid=next(seq), dim=dim, start=now, end=free_at,
+            rate=(wire / occupy) if occupy > 0 else float("inf"),
+            batch=batch, svc_idx=len(dim_services[dim]))
         dim_services[dim].append(
             (now, free_at, tuple(sorted({t.group for t in batch}))))
+        services[svc.sid] = svc
+        inflight[dim] = svc
+        if arbiter is not None:
+            arbiter.on_served(dim, batch, now)
         # Chunk stages complete A after their data drains (latency term).
-        heapq.heappush(events, (free_at, next(seq), "free", dim))
-        heapq.heappush(events, (free_at + a, next(seq), "done", (dim, batch)))
+        heapq.heappush(events, (free_at, next(seq), "free", (dim, svc.sid)))
+        heapq.heappush(events, (free_at + a, next(seq), "done", (dim, svc.sid)))
+
+    def maybe_preempt(dim: int, cand: StageTask, now: float) -> None:
+        """Split the in-flight service at chunk granularity if the arbiter
+        rules the candidate should not wait behind it.  Chunks whose data
+        already started draining complete; the rest requeue (no lost bytes).
+        """
+        svc = inflight[dim]
+        if svc is None or len(svc.batch) <= 1:
+            return
+        if not arbiter.should_preempt(dim, svc.batch[0], cand, now):
+            return
+        elapsed_bytes = (now - svc.start) * svc.rate
+        keep = [svc.batch[0]]
+        acc = svc.batch[0].wire_bytes
+        for t in svc.batch[1:]:
+            if acc >= elapsed_bytes:  # this chunk has not started draining
+                break
+            keep.append(t)
+            acc += t.wire_bytes
+        cut = svc.batch[len(keep):]
+        if not cut:
+            return
+        new_end = svc.start + acc / svc.rate
+        dim_busy[dim] -= svc.end - new_end
+        dim_wire[dim] -= sum(t.wire_bytes for t in cut)
+        busy_until[dim] = new_end
+        cut_ids = {t.op_id for t in cut}
+        dim_order[dim] = [o for o in dim_order[dim] if o not in cut_ids]
+        s0 = dim_services[dim][svc.svc_idx][0]
+        dim_services[dim][svc.svc_idx] = (
+            s0, new_end, tuple(sorted({t.group for t in keep})))
+        services.pop(svc.sid)
+        svc.sid = next(seq)
+        svc.end = new_end
+        svc.batch = keep
+        services[svc.sid] = svc
+        a = max(t.fixed_delay for t in keep)
+        heapq.heappush(events, (new_end, next(seq), "free", (dim, svc.sid)))
+        heapq.heappush(events, (new_end + a, next(seq), "done", (dim, svc.sid)))
+        for t in cut:
+            queues[dim].append(t)
+        arbiter.on_preempted(dim, cut, now)
 
     makespan = max(issue_times) if issue_times else 0.0
     while events:
         now, _, kind, payload = heapq.heappop(events)
-        makespan = max(makespan, now)
+        # NB: stale events (from preempted services) must not advance the
+        # makespan — their timestamps no longer correspond to real work.
         if kind == "ready":
+            makespan = max(makespan, now)
             task: StageTask = payload  # type: ignore[assignment]
             if pending_since[task.dim] is None:
                 pending_since[task.dim] = now
             queues[task.dim].append(task)
+            if (arbiter is not None and getattr(arbiter, "preemption", False)
+                    and busy_until[task.dim] > now):
+                maybe_preempt(task.dim, task, now)
             try_start(task.dim, now)
         elif kind == "free":
-            dim: int = payload  # type: ignore[assignment]
+            dim, sid = payload  # type: ignore[misc]
+            if sid not in services:
+                continue  # stale: service was preempted and rescheduled
+            makespan = max(makespan, now)
+            if inflight[dim] is not None and inflight[dim].sid == sid:
+                inflight[dim] = None
             if not queues[dim] and pending_since[dim] is not None:
                 activity[dim].append((pending_since[dim], now))
                 pending_since[dim] = None
             try_start(dim, now)
         else:  # done — chunk's next stage becomes ready
-            dim, batch = payload  # type: ignore[misc]
-            for t in batch:
+            dim, sid = payload  # type: ignore[misc]
+            svc = services.pop(sid, None)
+            if svc is None:
+                continue  # stale: service was preempted and rescheduled
+            makespan = max(makespan, now)
+            for t in svc.batch:
                 nxt = (t.chunk_id, t.stage_idx + 1)
                 if nxt in tasks:
                     push_ready(tasks[nxt], now)
                 elif group_finish[t.group] < now:  # chunk chain retired
                     group_finish[t.group] = now
+                    if arbiter is not None:
+                        arbiter.on_group_finish(
+                            t.group, t.tenant, now - issue_times[t.group])
 
     for dim in range(num_dims):
         if pending_since[dim] is not None:  # pragma: no cover - safety
             activity[dim].append((pending_since[dim], makespan))
 
     return SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
-                     dim_services, list(issue_times), group_finish)
+                     dim_services, list(issue_times), group_finish,
+                     list(streams), list(tenants), group_wire)
 
 
 def simulate_scheduled(
@@ -360,6 +553,7 @@ def simulate_requests(
     intra: str = "SCF",
     fusion: bool = True,
     water_filling: bool = False,
+    arbiter=None,
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Online entry point: schedule and simulate an arrival-time-aware
     request stream.
@@ -369,7 +563,10 @@ def simulate_requests(
     each collective's chunk orders account for the residual load of every
     collective still in flight.  The returned chunk groups are indexed like
     ``requests``; ``SimResult.group_issue``/``group_finish`` give each
-    request's service window.
+    request's service window.  For multi-tenant streams this is the
+    *shared-tracker* mode (one fabric-wide load view); see
+    ``repro.tenancy.simulate_fabric`` for per-tenant trackers and
+    inter-tenant arbitration.
     """
     from repro.core.scheduler import ThemisScheduler
 
@@ -387,5 +584,8 @@ def simulate_requests(
         priorities=[r.priority for r in requests],
         intra=intra,
         fusion=fusion,
+        tenants=[r.tenant for r in requests],
+        streams=[r.stream for r in requests],
+        arbiter=arbiter,
     )
     return res, groups

@@ -305,20 +305,43 @@ def dp_bucket_requests(
 
 
 def _coalesce_buckets(sizes: list[float], n_buckets: int) -> list[float]:
-    """Greedily merge adjacent per-tensor sizes into ~n_buckets buckets,
-    preserving retirement order (mirrors DDP gradient bucketing)."""
+    """Merge adjacent per-tensor sizes into exactly ``n_buckets`` buckets,
+    preserving retirement order (mirrors DDP gradient bucketing).
+
+    Mass-preserving with a stable bucket count: the per-bucket target is
+    recomputed from the *remaining* mass (so one huge tensor overshooting an
+    early bucket does not starve the later ones), a bucket closes on the
+    boundary that lands closest to its target, and a bucket is force-closed
+    when the tensors left are just enough to give every remaining bucket
+    one — so skewed size distributions can neither drop a trailing
+    zero-mass bucket nor collapse the count below ``n_buckets``.
+    """
+    if n_buckets < 1:
+        raise ValueError("n_buckets must be >= 1")
     if len(sizes) <= n_buckets:
-        return sizes
-    target = sum(sizes) / n_buckets
+        return list(sizes)
     out: list[float] = []
     acc = 0.0
-    for s in sizes:
-        acc += s
-        if acc >= target and len(out) < n_buckets - 1:
+    n_acc = 0
+    mass_left = sum(sizes)
+    target = mass_left / n_buckets
+    for i, s in enumerate(sizes):
+        tensors_left = len(sizes) - i          # including s
+        buckets_left = n_buckets - len(out)    # including the open bucket
+        close = n_acc > 0 and buckets_left > 1 and (
+            tensors_left <= buckets_left  # must leave >= 1 tensor per bucket
+            or abs(acc - target) <= abs(acc + s - target)
+        )
+        if close:
             out.append(acc)
+            mass_left -= acc
             acc = 0.0
+            n_acc = 0
+            target = mass_left / (n_buckets - len(out))
+        acc += s
+        n_acc += 1
     out.append(acc)
-    return [s for s in out if s > 0]
+    return out
 
 
 def calibrate_compute(

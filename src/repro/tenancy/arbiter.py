@@ -1,0 +1,172 @@
+"""Fabric arbiter: inter-tenant queue disciplines with preemptive service.
+
+The arbiter is the pluggable per-dimension discipline the simulator
+(:func:`repro.core.simulator.simulate`) consults when multiple tenants'
+chunk stages are ready on one network dimension:
+
+  * ``fifo``            — tenant-blind arrival order (the do-nothing
+                          baseline every shared fabric starts from).
+  * ``strict-priority`` — higher :attr:`TenantSpec.priority` always first;
+                          preempts in-flight lower-priority service.
+  * ``weighted-fair``   — bytes-weighted max-min per dimension, deficit-
+                          counter style: each (dim, tenant) pair accrues
+                          virtual time ``bytes / weight`` as its chunks are
+                          served, and the tenant with the smallest virtual
+                          time is served next, so over any backlogged
+                          interval tenants receive bandwidth proportional
+                          to their weights.
+  * ``slo-aware``       — weighted-fair whose effective weight is boosted
+                          by ``observed_slowdown / slo`` once a tenant's
+                          running slowdown (vs. its isolated latency)
+                          exceeds its SLO target.
+
+Preemption: when a tenant whose virtual time trails the in-flight tenant's
+(or whose strict priority exceeds it) becomes ready, the simulator splits
+the in-flight multi-chunk service at chunk granularity — chunks whose data
+has not started draining return to the queue (``on_preempted`` refunds
+their bytes), so a small latency-sensitive tenant never waits behind a
+1 GB collective's full service.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Mapping
+
+from repro.tenancy.tenants import TenantSpec
+
+ARBITER_POLICIES = ("fifo", "strict-priority", "weighted-fair", "slo-aware")
+
+
+class FabricArbiter:
+    """Per-dim inter-tenant discipline + preemption policy.
+
+    Duck-typed against the simulator's hooks: ``order_key``,
+    ``should_preempt``, ``on_served``, ``on_preempted``,
+    ``on_group_finish``, plus the ``preemption`` / ``quantum_chunks``
+    attributes.
+
+    ``isolated_latency`` maps tenant -> mean isolated request latency
+    (seconds), the reference the slo-aware policy measures slowdown
+    against; tenants absent from the map are treated as meeting their SLO.
+    """
+
+    def __init__(
+        self,
+        policy: str,
+        specs: Iterable[TenantSpec] = (),
+        *,
+        preemption: bool = True,
+        quantum_chunks: int = 8,
+        isolated_latency: Mapping[str, float] | None = None,
+    ):
+        if policy not in ARBITER_POLICIES:
+            raise ValueError(
+                f"unknown arbiter policy {policy!r}; want {ARBITER_POLICIES}")
+        if quantum_chunks < 1:
+            raise ValueError("quantum_chunks must be >= 1")
+        self.policy = policy
+        self.specs: dict[str, TenantSpec] = {s.name: s for s in specs}
+        # FIFO never reorders, so preempting would be pure overhead.
+        self.preemption = preemption and policy != "fifo"
+        self.quantum_chunks = quantum_chunks
+        self.isolated_latency = dict(isolated_latency or {})
+        self._served: dict[tuple[int, str], float] = {}  # (dim, tenant) -> bytes
+        # Virtual time accrues *at service time* (bytes / weight-then), so a
+        # later slo-aware weight boost rescales only future service, not the
+        # tenant's whole served history.
+        self._vt: dict[tuple[int, str], float] = {}
+        self._inflight_inc: dict[int, dict] = {}  # dim -> {op_id: vt inc}
+        self._latency: dict[str, dict[int, float]] = {}  # tenant -> {group: s}
+        self._lat_sum: dict[str, float] = {}  # running sum of _latency values
+        self._preempt_count = 0
+
+    # -- tenant lookups ------------------------------------------------------
+    def spec(self, tenant: str) -> TenantSpec:
+        # order_key runs in the simulator hot loop: cache default specs for
+        # unregistered tenants instead of allocating one per lookup
+        got = self.specs.get(tenant)
+        if got is None:
+            got = self.specs[tenant] = TenantSpec(tenant)
+        return got
+
+    def effective_weight(self, tenant: str) -> float:
+        w = max(self.spec(tenant).weight, 1e-12)
+        if self.policy == "slo-aware":
+            w *= self.slo_boost(tenant)
+        return w
+
+    def observed_slowdown(self, tenant: str) -> float | None:
+        """Running mean request latency over the isolated reference."""
+        iso = self.isolated_latency.get(tenant)
+        lats = self._latency.get(tenant)
+        if not iso or not lats:
+            return None
+        return (self._lat_sum[tenant] / len(lats)) / iso
+
+    def slo_boost(self, tenant: str) -> float:
+        slo = self.spec(tenant).slo_slowdown
+        slowdown = self.observed_slowdown(tenant)
+        if slo is None or slowdown is None:
+            return 1.0
+        return max(1.0, slowdown / slo)
+
+    def virtual_time(self, dim: int, tenant: str) -> float:
+        return self._vt.get((dim, tenant), 0.0)
+
+    # -- simulator hooks -----------------------------------------------------
+    def order_key(self, task, dim: int, now: float):
+        if self.policy == "fifo":
+            return (task.arrival_seq,)
+        if self.policy == "strict-priority":
+            return (-self.spec(task.tenant).priority, task.arrival_seq)
+        # weighted-fair / slo-aware: smallest virtual time first; SCF-style
+        # size tiebreak within a tenant keeps short chunks from idling.
+        return (self.virtual_time(dim, task.tenant),
+                task.wire_bytes, task.arrival_seq)
+
+    def should_preempt(self, dim: int, running, candidate, now: float) -> bool:
+        if self.policy == "fifo" or running.tenant == candidate.tenant:
+            return False
+        if self.policy == "strict-priority":
+            return (self.spec(candidate.tenant).priority
+                    > self.spec(running.tenant).priority)
+        # Fair policies: preempt only if the candidate tenant would *still*
+        # trail the running tenant after receiving one chunk of service —
+        # the one-chunk hysteresis stops equal-share tenants thrashing.
+        vt_cand = (self.virtual_time(dim, candidate.tenant)
+                   + candidate.wire_bytes / self.effective_weight(candidate.tenant))
+        return vt_cand < self.virtual_time(dim, running.tenant)
+
+    def on_served(self, dim: int, batch, now: float) -> None:
+        incs = self._inflight_inc[dim] = {}
+        for t in batch:
+            key = (dim, t.tenant)
+            self._served[key] = self._served.get(key, 0.0) + t.wire_bytes
+            inc = t.wire_bytes / self.effective_weight(t.tenant)
+            self._vt[key] = self._vt.get(key, 0.0) + inc
+            incs[t.op_id] = inc
+
+    def on_preempted(self, dim: int, cut, now: float) -> None:
+        # Refund exactly the virtual time charged when the service started
+        # (the weight may have changed since; the charge must round-trip).
+        self._preempt_count += 1
+        incs = self._inflight_inc.get(dim, {})
+        for t in cut:
+            key = (dim, t.tenant)
+            self._served[key] -= t.wire_bytes
+            self._vt[key] -= incs.pop(t.op_id, 0.0)
+
+    def on_group_finish(self, group: int, tenant: str, latency: float) -> None:
+        # Chunk chains of one request retire progressively; keeping the
+        # latest observation per group converges to the request's latency.
+        lats = self._latency.setdefault(tenant, {})
+        self._lat_sum[tenant] = (self._lat_sum.get(tenant, 0.0)
+                                 + latency - lats.get(group, 0.0))
+        lats[group] = latency
+
+    # -- reporting -----------------------------------------------------------
+    @property
+    def preempt_count(self) -> int:
+        return self._preempt_count
+
+    def served_bytes(self, tenant: str) -> float:
+        return sum(v for (d, t), v in self._served.items() if t == tenant)

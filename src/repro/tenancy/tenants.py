@@ -1,0 +1,109 @@
+"""Tenants: workloads sharing one multi-dimensional fabric.
+
+A :class:`TenantSpec` describes a tenant's share contract — scheduling
+weight, optional strict priority, an SLO expressed as the maximum
+acceptable slowdown versus running alone, and its arrival offset on the
+shared fabric.  A :class:`TenantJob` binds a spec to a training
+:class:`~repro.core.workloads.Workload` and emits that workload's backprop
+bucket stream (``dp_bucket_requests``) over many iterations as
+tenant-tagged :class:`~repro.core.requests.CollectiveRequest`s, which the
+fabric layer (:mod:`repro.tenancy.fabric`) schedules and simulates jointly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from repro.core.requests import CollectiveRequest
+from repro.core.workloads import Workload, dp_bucket_requests
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """Share contract of one tenant on the shared fabric.
+
+    ``weight``        — weighted-fair share (bytes-weighted max-min).
+    ``priority``      — strict-priority rank (higher preempts lower).
+    ``slo_slowdown``  — max acceptable slowdown vs. running alone
+                        (None: best-effort, no SLO).
+    ``arrival_offset_s`` — when the tenant's first iteration starts.
+    ``iterations``    — how many training iterations to emit.
+    ``n_buckets``     — gradient buckets per iteration.
+    """
+
+    name: str
+    weight: float = 1.0
+    priority: int = 0
+    slo_slowdown: float | None = None
+    arrival_offset_s: float = 0.0
+    iterations: int = 1
+    n_buckets: int = 8
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError("weight must be > 0")
+        if self.slo_slowdown is not None and self.slo_slowdown < 1.0:
+            raise ValueError("slo_slowdown is a slowdown factor; must be >= 1")
+        if self.iterations < 1:
+            raise ValueError("iterations must be >= 1")
+        if self.n_buckets < 1:
+            raise ValueError("n_buckets must be >= 1")
+
+
+@dataclass
+class TenantJob:
+    """A tenant running a training workload: emits the workload's gradient
+    bucket stream per iteration, tagged with the tenant's name.
+
+    Iteration *i*'s backward pass starts at
+    ``arrival_offset + i * period + compute_fwd``; its buckets issue
+    progressively through the backward pass exactly as in the single-job
+    overlap engine.  ``iteration_gap_s`` overrides the period between
+    iteration starts (default: the workload's full compute time —
+    communication-bound tenants then overlap their own iterations too).
+    """
+
+    spec: TenantSpec
+    workload: Workload
+    iteration_gap_s: float | None = None
+
+    @property
+    def period_s(self) -> float:
+        if self.iteration_gap_s is not None:
+            return self.iteration_gap_s
+        return self.workload.compute_s
+
+    def requests(self) -> list[CollectiveRequest]:
+        out: list[CollectiveRequest] = []
+        base = dp_bucket_requests(self.workload, self.spec.n_buckets)
+        for it in range(self.spec.iterations):
+            t0 = (self.spec.arrival_offset_s + it * self.period_s
+                  + self.workload.compute_fwd_s)
+            for r in base:
+                out.append(replace(
+                    r,
+                    issue_time=t0 + r.issue_time,
+                    priority=self.spec.priority,
+                    tenant=self.spec.name,
+                    stream=f"{self.spec.name}/it{it}/{r.stream}",
+                ))
+        return out
+
+
+def synthetic_requests(
+    name: str,
+    collective: str,
+    size_bytes: float,
+    count: int,
+    gap_s: float = 0.0,
+    start_s: float = 0.0,
+    priority: int = 0,
+) -> list[CollectiveRequest]:
+    """A synthetic tenant stream: ``count`` equal collectives, ``gap_s``
+    apart, starting at ``start_s`` — handy for arbiter tests and studies
+    that do not need a full workload model."""
+    return [
+        CollectiveRequest(collective, size_bytes,
+                          issue_time=start_s + i * gap_s,
+                          priority=priority, stream=name, tenant=name)
+        for i in range(count)
+    ]

@@ -1,0 +1,266 @@
+"""Multi-tenant fabric subsystem tests: tenant-tagged request streams,
+arbiter policies, preemption correctness (byte conservation per dim), and
+the cross-tenant Themis shared-tracker mode."""
+import pytest
+
+from repro.core.latency_model import LatencyModel
+from repro.core.requests import CollectiveRequest
+from repro.core.simulator import simulate_requests
+from repro.core.workloads import make_resnet152
+from repro.tenancy import (
+    FabricArbiter,
+    TenantJob,
+    TenantSpec,
+    fairness_index,
+    isolated_latencies,
+    jain_index,
+    schedule_tenant_requests,
+    simulate_fabric,
+    synthetic_requests,
+    tenant_reports,
+)
+from repro.topology import make_table2_topologies
+
+TOPOS = make_table2_topologies()
+TOPO2D = TOPOS["2D-SW_SW"]
+MB = 1e6
+
+
+def _asym_scenario():
+    """Heavy batch tenant (big ARs, first in line) + light latency tenant."""
+    heavy = synthetic_requests("heavy", "AR", 300 * MB, 2)
+    light = synthetic_requests("light", "AR", 8 * MB, 6,
+                               gap_s=0.0004, start_s=0.0002)
+    specs = [TenantSpec("heavy", weight=1.0),
+             TenantSpec("light", weight=1.0, priority=1, slo_slowdown=1.5)]
+    return specs, heavy + light
+
+
+# --------------------------------------------------------------------------
+# Tenant-tagged request streams
+# --------------------------------------------------------------------------
+def test_tenant_job_emits_tagged_iterated_stream():
+    spec = TenantSpec("resnet", weight=2.0, iterations=3, n_buckets=4,
+                      arrival_offset_s=0.01)
+    job = TenantJob(spec, make_resnet152())
+    reqs = job.requests()
+    assert len(reqs) == 3 * 4
+    assert all(r.tenant == "resnet" for r in reqs)
+    assert all(r.stream.startswith("resnet/it") for r in reqs)
+    # iterations shift monotonically; no request before the arrival offset
+    assert min(r.issue_time for r in reqs) >= 0.01
+    it0 = [r for r in reqs if r.stream.startswith("resnet/it0/")]
+    it2 = [r for r in reqs if r.stream.startswith("resnet/it2/")]
+    assert max(r.issue_time for r in it0) < min(r.issue_time for r in it2)
+    # each iteration carries the full gradient mass
+    grad = sum(b.size_bytes for b in it0)
+    assert grad == pytest.approx(
+        sum(o.size_bytes for o in job.workload.comm_ops), rel=1e-9)
+
+
+def test_tenant_spec_validation():
+    with pytest.raises(ValueError):
+        TenantSpec("x", weight=0.0)
+    with pytest.raises(ValueError):
+        TenantSpec("x", slo_slowdown=0.5)
+    with pytest.raises(ValueError):
+        TenantSpec("x", iterations=0)
+    with pytest.raises(ValueError):
+        TenantSpec("x", n_buckets=0)
+
+
+# --------------------------------------------------------------------------
+# Arbiter policies
+# --------------------------------------------------------------------------
+def test_arbiter_policy_validation():
+    with pytest.raises(ValueError):
+        FabricArbiter("round-robin", [])
+    with pytest.raises(ValueError):
+        FabricArbiter("fifo", [], quantum_chunks=0)
+    assert FabricArbiter("fifo", []).preemption is False  # FIFO never preempts
+
+
+def test_weighted_fair_beats_fifo_for_light_tenant():
+    """Under FIFO the light tenant drains after the heavy tenant's giant
+    collectives; weighted-fair interleaves them, cutting the light tenant's
+    latency and raising the Jain index over per-tenant slowdowns."""
+    specs, reqs = _asym_scenario()
+    spec_map = {s.name: s for s in specs}
+    iso = isolated_latencies(TOPO2D, reqs, chunks_per_collective=8)
+    stats = {}
+    for policy in ("fifo", "weighted-fair"):
+        arb = FabricArbiter(policy, specs)
+        res, _ = simulate_fabric(TOPO2D, reqs, arbiter=arb,
+                                 chunks_per_collective=8)
+        reps = tenant_reports(res, reqs, iso, spec_map)
+        stats[policy] = (reps, fairness_index(reps))
+    fifo_reps, fifo_jain = stats["fifo"]
+    wf_reps, wf_jain = stats["weighted-fair"]
+    assert wf_reps["light"].mean_slowdown < fifo_reps["light"].mean_slowdown
+    assert wf_jain > fifo_jain
+
+
+def test_strict_priority_serves_high_priority_first():
+    specs, reqs = _asym_scenario()  # light has priority=1
+    iso = isolated_latencies(TOPO2D, reqs, chunks_per_collective=8)
+    arb = FabricArbiter("strict-priority", specs)
+    res, _ = simulate_fabric(TOPO2D, reqs, arbiter=arb,
+                             chunks_per_collective=8)
+    reps = tenant_reports(res, reqs, iso, {s.name: s for s in specs})
+    arb_fifo = FabricArbiter("fifo", specs)
+    res_f, _ = simulate_fabric(TOPO2D, reqs, arbiter=arb_fifo,
+                               chunks_per_collective=8)
+    reps_f = tenant_reports(res_f, reqs, iso, {s.name: s for s in specs})
+    assert reps["light"].mean_slowdown < reps_f["light"].mean_slowdown
+    assert arb.preempt_count > 0
+
+
+def test_slo_boost_kicks_in_on_violation():
+    spec = TenantSpec("t", weight=1.0, slo_slowdown=1.5)
+    arb = FabricArbiter("slo-aware", [spec], isolated_latency={"t": 0.010})
+    assert arb.slo_boost("t") == 1.0          # no observations yet
+    arb.on_group_finish(0, "t", 0.030)        # slowdown 3.0 > slo 1.5
+    assert arb.observed_slowdown("t") == pytest.approx(3.0)
+    assert arb.slo_boost("t") == pytest.approx(2.0)
+    assert arb.effective_weight("t") == pytest.approx(2.0)
+    arb.on_group_finish(0, "t", 0.012)        # latest observation wins
+    assert arb.slo_boost("t") == 1.0          # back under SLO
+
+
+# --------------------------------------------------------------------------
+# Preemption correctness
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["weighted-fair", "strict-priority"])
+def test_preemption_conserves_bytes(policy):
+    """Preempted services requeue their un-drained chunks: total and
+    per-dim wire bytes match the schedule-invariant baseline placement."""
+    specs, reqs = _asym_scenario()
+    lm = LatencyModel(TOPO2D)
+    arb = FabricArbiter(policy, specs)
+    res, _ = simulate_fabric(TOPO2D, reqs, arbiter=arb, policy="baseline",
+                             chunks_per_collective=8)
+    assert arb.preempt_count > 0  # the scenario genuinely preempts
+    want_total = sum(lm.total_wire_bytes(r.collective, r.size_bytes)
+                     for r in reqs)
+    assert sum(res.dim_wire_bytes) == pytest.approx(want_total, rel=1e-9)
+    # baseline chunk schedules are arrival-invariant -> per-dim totals equal
+    # the sum of each tenant's solo run, preemption or not
+    per_dim = [0.0] * TOPO2D.num_dims
+    for tenant in ("heavy", "light"):
+        solo, _ = simulate_fabric(
+            TOPO2D, [r for r in reqs if r.tenant == tenant],
+            policy="baseline", chunks_per_collective=8)
+        for k in range(TOPO2D.num_dims):
+            per_dim[k] += solo.dim_wire_bytes[k]
+    for k in range(TOPO2D.num_dims):
+        assert res.dim_wire_bytes[k] == pytest.approx(per_dim[k], rel=1e-9)
+    # every request finishes after its issue time
+    for g, r in enumerate(reqs):
+        assert res.group_finish[g] > r.issue_time
+
+
+def test_preemption_splits_inflight_service():
+    """A light request arriving while the heavy tenant's 8-chunk service is
+    in flight must not wait for the whole service to drain: preemption
+    splits it at chunk granularity, so the light tenant finishes strictly
+    earlier than without preemption, with no bytes lost."""
+    specs = [TenantSpec("heavy"), TenantSpec("light")]
+    heavy = synthetic_requests("heavy", "AR", 300 * MB, 1)
+    solo, _ = simulate_fabric(TOPO2D, heavy, chunks_per_collective=8)
+    light = synthetic_requests("light", "AR", 4 * MB, 1,
+                               start_s=0.25 * solo.makespan)
+    reqs = heavy + light
+    lm = LatencyModel(TOPO2D)
+    finishes = {}
+    for preempt in (True, False):
+        # quantum 8 -> the heavy collective's chunks coalesce into
+        # multi-chunk services, the thing preemption exists to split
+        arb = FabricArbiter("weighted-fair", specs, preemption=preempt,
+                            quantum_chunks=8)
+        res, _ = simulate_fabric(TOPO2D, reqs, arbiter=arb,
+                                 chunks_per_collective=8)
+        finishes[preempt] = res.group_finish[1]
+        want = sum(lm.total_wire_bytes(r.collective, r.size_bytes)
+                   for r in reqs)
+        assert sum(res.dim_wire_bytes) == pytest.approx(want, rel=1e-9)
+        if preempt:
+            assert arb.preempt_count > 0
+            assert any(res.groups_interleave_on(k)
+                       for k in range(TOPO2D.num_dims))
+    assert finishes[True] < finishes[False]
+
+
+# --------------------------------------------------------------------------
+# Cross-tenant Themis: shared vs per-tenant Dim Load Trackers
+# --------------------------------------------------------------------------
+def test_shared_tracker_sees_other_tenants_loads():
+    """With the shared tracker, tenant B's chunk orders react to tenant A's
+    in-flight load; with per-tenant trackers, B schedules as if alone."""
+    a = synthetic_requests("a", "AR", 200 * MB, 1)
+    b = synthetic_requests("b", "AR", 50 * MB, 1, start_s=1e-4)
+    shared = schedule_tenant_requests(TOPO2D, a + b, shared_tracker=True,
+                                      chunks_per_collective=8)
+    per_t = schedule_tenant_requests(TOPO2D, a + b, shared_tracker=False,
+                                     chunks_per_collective=8)
+    b_solo = schedule_tenant_requests(TOPO2D, b, shared_tracker=True,
+                                      chunks_per_collective=8)
+    # blind mode schedules B exactly as if it ran alone
+    assert [c.schedule for c in per_t[1]] == [c.schedule for c in b_solo[0]]
+    # shared mode steers B differently (around A's residual load)
+    assert ([c.schedule for c in shared[1]]
+            != [c.schedule for c in per_t[1]])
+
+
+def test_shared_tracker_helps_on_some_scenario():
+    """The cross-tenant Themis (shared tracker) beats blind per-tenant
+    trackers on makespan or mean slowdown for staggered contending
+    tenants on at least one Table-2 topology."""
+    wins = 0
+    for tname in ("2D-SW_SW", "3D-SW_SW_SW_hetero"):
+        topo = TOPOS[tname]
+        specs = [TenantSpec(n) for n in ("a", "b", "c")]
+        reqs = []
+        for i, s in enumerate(specs):
+            reqs += synthetic_requests(s.name, "AR", 200 * MB, 3,
+                                       gap_s=0.003, start_s=i * 0.001)
+        out = {}
+        for shared in (True, False):
+            arb = FabricArbiter("weighted-fair", specs)
+            res, _ = simulate_fabric(topo, reqs, arbiter=arb,
+                                     shared_tracker=shared,
+                                     chunks_per_collective=32)
+            out[shared] = res.finish_time()
+        if out[True] < out[False]:
+            wins += 1
+    assert wins >= 1
+
+
+# --------------------------------------------------------------------------
+# SimResult per-stream/tenant aggregation
+# --------------------------------------------------------------------------
+def test_stream_stats_aggregation():
+    reqs = (synthetic_requests("a", "AR", 40 * MB, 2)
+            + synthetic_requests("b", "RS", 20 * MB, 3, gap_s=1e-4))
+    res, _ = simulate_requests(TOPO2D, reqs, policy="themis",
+                               chunks_per_collective=8)
+    by_tenant = res.stream_stats(by="tenant")
+    assert set(by_tenant) == {"a", "b"}
+    assert by_tenant["a"].n == 2 and by_tenant["b"].n == 3
+    for tag, st in by_tenant.items():
+        gs = [g for g, r in enumerate(reqs) if r.tenant == tag]
+        assert st.finish == pytest.approx(
+            max(res.group_finish[g] for g in gs))
+        assert st.latency_max >= st.latency_mean > 0
+    # wire-byte attribution is exhaustive
+    assert sum(s.wire_bytes for s in by_tenant.values()) == pytest.approx(
+        sum(res.dim_wire_bytes), rel=1e-9)
+    assert res.stream_finish("a", by="tenant") == by_tenant["a"].finish
+    with pytest.raises(ValueError):
+        res.stream_stats(by="nope")
+
+
+def test_jain_index_basics():
+    assert jain_index([]) == 1.0
+    assert jain_index([2.0, 2.0, 2.0]) == pytest.approx(1.0)
+    assert jain_index([1.0, 0.0, 0.0]) == pytest.approx(1 / 3)
+    assert 0.5 < jain_index([1.0, 2.0]) < 1.0

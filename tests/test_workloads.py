@@ -3,6 +3,7 @@ import pytest
 
 from repro.core.workloads import (
     ALL_WORKLOADS,
+    _coalesce_buckets,
     iteration_time,
     make_transformer_1t,
     resnet152_param_buckets,
@@ -18,6 +19,28 @@ def test_resnet_bucket_total_matches_params():
     assert 55e6 < total < 65e6  # ~60.2M params
 
 
+def test_coalesce_buckets_skewed_sizes_keep_count_and_mass():
+    """Regression: a huge leading tensor used to overshoot the fixed target
+    and collapse the bucket count; trailing zero-mass buckets were dropped.
+    The coalescer must stay mass-preserving with a stable bucket count."""
+    skewed = [100.0] + [1.0] * 12
+    out = _coalesce_buckets(skewed, 4)
+    assert len(out) == 4
+    assert sum(out) == pytest.approx(sum(skewed))
+    # huge tensor at the *end* (the trailing-bucket variant)
+    out = _coalesce_buckets(list(reversed(skewed)), 4)
+    assert len(out) == 4
+    assert sum(out) == pytest.approx(sum(skewed))
+    # stable count and mass across bucket counts on the real layer profile
+    sizes = resnet152_param_buckets()
+    for n in (1, 2, 7, 16, len(sizes), len(sizes) + 5):
+        out = _coalesce_buckets(sizes, n)
+        assert len(out) == min(n, len(sizes))
+        assert sum(out) == pytest.approx(sum(sizes), rel=1e-12)
+    with pytest.raises(ValueError):
+        _coalesce_buckets(sizes, 0)
+
+
 def test_split_topology_boundary_inside_dim():
     mp, dp = split_topology(TOPOS["2D-SW_SW"], 128)
     assert mp.size_str() == "16x8"
@@ -25,6 +48,52 @@ def test_split_topology_boundary_inside_dim():
     mp, dp = split_topology(TOPOS["4D-Ring_SW_SW_SW"], 128)
     assert mp.total_npus == 128
     assert dp.total_npus == 8
+
+
+def test_split_topology_inner_outer_split_shares_fabric():
+    """When the MP boundary falls inside a dimension, the split dim's inner
+    (MP) and outer (DP) logical sub-dimensions keep the physical dim's link
+    BW, per-NPU link count, and step latency — same fabric, shared."""
+    topo = TOPOS["2D-SW_SW"]  # 16 x 64
+    mp, dp = split_topology(topo, 128)  # boundary inside the 64-way dim
+    split_src = topo.dims[1]
+    inner, outer = mp.dims[1], dp.dims[0]
+    assert inner.npus * outer.npus == split_src.npus
+    for sub in (inner, outer):
+        assert sub.topo == split_src.topo
+        assert sub.link_gbps == split_src.link_gbps
+        assert sub.links_per_npu == split_src.links_per_npu
+        assert sub.step_latency_s == split_src.step_latency_s
+
+
+@pytest.mark.parametrize("tname", sorted(TOPOS))
+def test_split_topology_preserves_npu_count(tname):
+    """mp.total_npus * dp.total_npus == total for every boundary that
+    divides the NPU count along dim order."""
+    topo = TOPOS[tname]
+    mp_sizes = {1}
+    prod = 1
+    for d in topo.dims:  # all prefix products and in-dim powers of two
+        for inner in (2, 4, d.npus):
+            if d.npus % inner == 0:
+                mp_sizes.add(prod * inner)
+        prod *= d.npus
+    for mp_npus in sorted(mp_sizes):
+        mp, dp = split_topology(topo, mp_npus)
+        assert mp.total_npus * dp.total_npus == topo.total_npus, mp_npus
+        assert mp.total_npus == mp_npus or mp_npus == 1
+
+
+def test_split_topology_edges():
+    """mp_npus=1 -> empty MP topology, DP is the full fabric; mp_npus=total
+    -> MP is the full fabric, DP empty."""
+    topo = TOPOS["3D-SW_SW_SW_homo"]
+    mp, dp = split_topology(topo, 1)
+    assert mp.num_dims == 0 and mp.total_npus == 1
+    assert dp.dims == topo.dims
+    mp, dp = split_topology(topo, topo.total_npus)
+    assert mp.total_npus == topo.total_npus
+    assert dp.num_dims == 0 and dp.total_npus == 1
 
 
 def test_iteration_ordering_baseline_ge_themis_ge_ideal():
