@@ -13,6 +13,19 @@ def timed(fn, *args, repeat: int = 1, **kw):
     return out, us
 
 
+def timed_best(fn, *args, repeat: int = 1, **kw):
+    """Like :func:`timed` but returns the best-of-``repeat`` wall time in
+    *seconds* — for scaling fits, where the minimum is the noise-robust
+    estimator."""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
 def row(name: str, us: float, derived) -> tuple[str, float, str]:
     return (name, us, derived)
 

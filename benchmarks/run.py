@@ -19,6 +19,7 @@ def main() -> None:
         insights_study,
         overlap_study,
         roofline_table,
+        sched_perf,
         tenancy_study,
     )
     from benchmarks.common import print_rows
@@ -31,6 +32,7 @@ def main() -> None:
         ("fig12", fig12_workloads),
         ("overlap", overlap_study),
         ("tenancy", tenancy_study),
+        ("sched_perf", sched_perf),
         ("insights", insights_study),
         ("beyond", beyond_paper),
         ("roofline", roofline_table),

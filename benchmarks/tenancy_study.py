@@ -13,6 +13,11 @@ Three experiments on shared Table-2 fabrics:
   * **tracker ablation** — three staggered tenants under the
     `weighted-fair` arbiter, scheduled by the cross-tenant Themis with one
     *shared* fabric-wide Dim Load Tracker vs. blind *per-tenant* trackers.
+  * **preemption cost** — the fairness scenario under `weighted-fair` with
+    a swept ``preempt_penalty_s`` (re-arm latency charged to chunks a
+    preemption requeues).  Free splits (0.0) are the upper bound on the
+    light tenant's benefit; growing penalties show when chunk-granularity
+    preemption stops paying for itself.
 
 Emits ``BENCH_tenancy.json`` at the repo root (machine-readable perf
 trajectory) plus the usual CSV rows.
@@ -109,7 +114,7 @@ def _sweep(topo, scenario_fn):
         us, cell = _policy_cell(topo, reqs, specs, iso, policy)
         us_tot += us
         cells[policy] = cell
-    return us_tot / len(POLICIES), cells
+    return us_tot / len(POLICIES), cells, (specs, reqs, iso)
 
 
 def _ablation(topo):
@@ -132,6 +137,30 @@ def _ablation(topo):
     return us_tot / 2, out
 
 
+PREEMPT_PENALTIES_S = (0.0, 50e-6, 200e-6, 1e-3)
+
+
+def _preemption_cost(topo, specs, reqs, iso):
+    """Penalty sweep on the fairness scenario (reuses its isolated refs)."""
+    spec_map = {s.name: s for s in specs}
+    out = {}
+    us_tot = 0.0
+    for penalty in PREEMPT_PENALTIES_S:
+        arb = FabricArbiter("weighted-fair", specs,
+                            preempt_penalty_s=penalty)
+        (res, _), us = timed(simulate_fabric, topo, reqs, arbiter=arb,
+                             chunks_per_collective=CHUNKS)
+        us_tot += us
+        reps = tenant_reports(res, reqs, iso, spec_map)
+        out[f"{penalty * 1e6:.0f}us"] = {
+            "makespan_ms": res.finish_time() * 1e3,
+            "prod_slowdown": reps["prod"].mean_slowdown,
+            "jain": fairness_index(reps),
+            "preemptions": arb.preempt_count,
+        }
+    return us_tot / len(PREEMPT_PENALTIES_S), out
+
+
 def run():
     topos = make_table2_topologies()
     rows = []
@@ -141,9 +170,12 @@ def run():
     for tname in TOPO_NAMES:
         topo = topos[tname]
         trep: dict = {}
+        fairness_ctx = None
         for scen, fn in (("fairness", _fairness_tenants),
                          ("workloads", _workload_tenants)):
-            us, cells = _sweep(topo, fn)
+            us, cells, ctx = _sweep(topo, fn)
+            if scen == "fairness":
+                fairness_ctx = ctx
             trep[scen] = cells
             for policy, c in cells.items():
                 rows.append(row(
@@ -155,6 +187,17 @@ def run():
             if scen == "fairness" and (cells["weighted-fair"]["jain"]
                                        > cells["fifo"]["jain"]):
                 wf_beats_fifo.append(tname)
+        us, pc = _preemption_cost(topo, *fairness_ctx)
+        trep["preemption_cost"] = pc
+        free = pc["0us"]
+        worst = pc[f"{PREEMPT_PENALTIES_S[-1] * 1e6:.0f}us"]
+        rows.append(row(
+            f"tenancy/{tname}/preemption_cost", us,
+            f"free: prod_sd={free['prod_slowdown']:.3f} "
+            f"preempts={free['preemptions']} | "
+            f"{PREEMPT_PENALTIES_S[-1] * 1e6:.0f}us: "
+            f"prod_sd={worst['prod_slowdown']:.3f} "
+            f"preempts={worst['preemptions']}"))
         us, abl = _ablation(topo)
         trep["tracker_ablation"] = abl
         if abl["shared_wins"]:

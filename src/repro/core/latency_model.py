@@ -17,12 +17,31 @@ considers n_K^i x B_K as the latency of chunk #i on dimK").
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import cached_property
 from typing import Sequence
 
 from repro.topology import Phase, Topology
 
 # A stage of a chunk's schedule: which phase runs on which dimension index.
 StageOp = tuple[Phase, int]
+
+
+@dataclass(frozen=True)
+class StageTables:
+    """Flat per-dim factor arrays for allocation-free stage math.
+
+    ``wire = rs_wire[k] * size`` (RS) / ``ag_wire[k] * size`` (AG) and the
+    post-stage size is ``size / npus[k]`` / ``size * npus[k]`` — the exact
+    expressions of :func:`stage_transition`, just precomputed per dim.
+    """
+
+    rs_wire: list[float]    # (P-1)/P per dim (0.0 when P <= 1)
+    ag_wire: list[float]    # float(P-1) per dim (0.0 when P <= 1)
+    npus: list[int]
+    rs_step: list[float]    # step_delay(dim, RS)
+    ag_step: list[float]    # step_delay(dim, AG)
+    per_byte: list[float]   # 1 / aggr_bw_bytes
+    bw: list[float]         # aggr_bw_bytes
 
 
 def stage_transition(phase: Phase, npus: int, size_before: float) -> tuple[float, float]:
@@ -76,6 +95,31 @@ class LatencyModel:
     ) -> tuple[float, float]:
         return stage_transition(phase, self.topology.dims[dim_idx].npus, size_before)
 
+    # ---- flat per-dim tables for the hot paths ------------------------------
+    @cached_property
+    def stage_tables(self) -> "StageTables":
+        """Precomputed per-dim factors so the simulator/scheduler hot loops
+        run on flat arrays instead of method calls per stage.
+
+        The factors are built with the *same* float expressions as
+        :func:`stage_transition` / :meth:`step_delay`, so results computed
+        from them are bit-identical to the method-call path (required by the
+        indexed-engine equivalence gate).
+        """
+        rs_wire, ag_wire, npus = [], [], []
+        rs_step, ag_step, per_byte, bw = [], [], [], []
+        for d in self.topology.dims:
+            n = d.npus
+            npus.append(n)
+            rs_wire.append((n - 1) / n if n > 1 else 0.0)
+            ag_wire.append(float(n - 1) if n > 1 else 0.0)
+            rs_step.append(d.algorithm.steps(n, Phase.RS) * d.step_latency_s)
+            ag_step.append(d.algorithm.steps(n, Phase.AG) * d.step_latency_s)
+            per_byte.append(1.0 / d.aggr_bw_bytes)
+            bw.append(d.aggr_bw_bytes)
+        return StageTables(rs_wire, ag_wire, npus, rs_step, ag_step,
+                           per_byte, bw)
+
     # ---- per-chunk load prediction (Algorithm 1 lines 28-29) ---------------
     def calc_loads(
         self, chunk_bytes: float, schedule: Sequence[StageOp]
@@ -91,6 +135,28 @@ class LatencyModel:
             wire, size = self.stage_wire_bytes(dim_idx, phase, size)
             loads[dim_idx] = loads.get(dim_idx, 0.0) + self.wire_time(dim_idx, wire)
         return loads
+
+    def calc_loads_list(
+        self, chunk_bytes: float, schedule: Sequence[StageOp]
+    ) -> list[float]:
+        """Dense variant of :meth:`calc_loads`: returns a per-dim load vector
+        of length ``num_dims`` (0.0 for untouched dims).  Bit-identical per
+        dim to the dict path; avoids a dict allocation per chunk."""
+        t = self.stage_tables
+        out = [0.0] * self.topology.num_dims
+        size = chunk_bytes
+        rs = Phase.RS
+        for phase, k in schedule:
+            n = t.npus[k]
+            if n <= 1:
+                continue
+            if phase == rs:
+                out[k] += t.rs_wire[k] * size * t.per_byte[k]
+                size = size / n
+            else:
+                out[k] += t.ag_wire[k] * size * t.per_byte[k]
+                size = size * n
+        return out
 
     # ---- ideal bound (paper Table 3 'Ideal') --------------------------------
     def ideal_time(self, collective: str, size_bytes: float) -> float:

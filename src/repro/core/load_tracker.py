@@ -66,6 +66,16 @@ class DimLoadTracker:
         for dim_idx, secs in new_load.items():
             self._loads[dim_idx] += secs
 
+    def update_loads(self, deltas: list[float]) -> None:
+        """Elementwise add of a dense per-dim load vector (the hot-path
+        variant of :meth:`update`, fed by ``calc_loads_list``; adding the
+        vector's 0.0 entries is a float no-op, so both paths agree bit-for-
+        bit)."""
+        loads = self._loads
+        for k, v in enumerate(deltas):
+            if v:
+                loads[k] += v
+
     @property
     def imbalance(self) -> float:
         return max(self._loads) - min(self._loads)

@@ -77,11 +77,36 @@ class ThemisScheduler:
     policy: str = "themis"
     tracker: DimLoadTracker | None = None
 
+    # Caches are bounded: equal-size chunk runs produce a handful of distinct
+    # (size, schedule) pairs, but adversarial streams with many distinct
+    # sizes must not grow memory without bound.
+    _CACHE_CAP = 4096
+
     def __post_init__(self):
         if self.policy not in POLICIES:
             raise ValueError(f"unknown policy {self.policy!r}; want {POLICIES}")
         if self.tracker is None:
             self.tracker = DimLoadTracker(self.latency_model)
+        # (chunk_bytes, schedule) -> dense per-dim load delta.  Exact: the
+        # delta a schedule adds is independent of the current loads.
+        self._delta_cache: dict[tuple, list[float]] = {}
+        # Rank-signature memo for the greedy order (see _greedy_order).
+        self._greedy_cache: dict[tuple, tuple[StageOp, ...]] = {}
+        # (min_dim, chunk_bytes) -> Sec. 5.3 threshold.
+        self._thr_cache: dict[tuple[int, float], float] = {}
+        # collective -> the D! lookahead candidate schedules.
+        self._cand_cache: dict[str, list[tuple[StageOp, ...]]] = {}
+
+    def _stage_deltas(self, chunk_bytes: float, sched) -> list[float]:
+        """Per-dim load vector one chunk adds via ``sched`` (memoized)."""
+        key = (chunk_bytes, tuple(sched))
+        got = self._delta_cache.get(key)
+        if got is None:
+            if len(self._delta_cache) >= self._CACHE_CAP:
+                self._delta_cache.clear()
+            got = self._delta_cache[key] = self.latency_model.calc_loads_list(
+                chunk_bytes, sched)
+        return got
 
     # -- public API -----------------------------------------------------------
     def schedule_collective(
@@ -164,39 +189,65 @@ class ThemisScheduler:
                  baseline_order(d, collective)])
         else:
             sched = self._greedy_order(collective, chunk_bytes)
-        self.tracker.update(self.latency_model.calc_loads(chunk_bytes, sched))
+        self.tracker.update_loads(self._stage_deltas(chunk_bytes, sched))
         return sched
 
     def _below_threshold(self, loads: Sequence[float], chunk_bytes: float) -> bool:
         min_dim = min(range(len(loads)), key=loads.__getitem__)
-        wire, _ = self.latency_model.stage_wire_bytes(
-            min_dim, Phase.RS, chunk_bytes / THRESHOLD_DIVISOR
-        )
-        threshold = self.latency_model.wire_time(min_dim, wire)
+        threshold = self._thr_cache.get((min_dim, chunk_bytes))
+        if threshold is None:
+            wire, _ = self.latency_model.stage_wire_bytes(
+                min_dim, Phase.RS, chunk_bytes / THRESHOLD_DIVISOR
+            )
+            if len(self._thr_cache) >= self._CACHE_CAP:
+                self._thr_cache.clear()
+            threshold = self._thr_cache[(min_dim, chunk_bytes)] = (
+                self.latency_model.wire_time(min_dim, wire))
         return max(loads) - min(loads) < threshold
 
     def _greedy_order(self, collective: str, chunk_bytes: float) -> list[StageOp]:
+        """Algorithm 1 greedy order, memoized on the *load-rank signature*.
+
+        Outside the independent-AG variant the greedy output is a pure
+        function of (collective, below-threshold flag, sorted dim
+        permutation) — so equal-size chunk runs reuse the schedule until the
+        dim ranking flips, which is what makes water_filling's >=1024
+        micro-chunk pass cheap.  ``themis_indep_ag``'s AG pass depends on
+        the load *values* (not just ranks), so it is recomputed each time
+        (its RS-delta lookup still hits ``_stage_deltas``).
+        """
         d = self.latency_model.topology.num_dims
         loads = self.tracker.get_loads()
-        if self._below_threshold(loads, chunk_bytes):
-            return baseline_order(d, collective)
-        if collective == "RS":
-            return [(Phase.RS, k) for k in _sorted_dims(loads, descending=False)]
-        if collective == "AG":
-            return [(Phase.AG, k) for k in _sorted_dims(loads, descending=True)]
-        # AR: RS order = ascending loads; AG = reverse(RS) (Alg. 1 line 8) —
-        # unless policy allows an independent AG pass (beyond paper).
-        rs_dims = _sorted_dims(loads, descending=False)
-        rs = [(Phase.RS, k) for k in rs_dims]
-        if self.policy == "themis_indep_ag":
-            interim = dict(enumerate(loads))
-            for dim, secs in self.latency_model.calc_loads(chunk_bytes, rs).items():
-                interim[dim] += secs
-            ag_loads = [interim[k] for k in range(d)]
+        below = self._below_threshold(loads, chunk_bytes)
+        if (self.policy == "themis_indep_ag" and collective == "AR"
+                and not below):
+            rs_dims = _sorted_dims(loads, descending=False)
+            rs = [(Phase.RS, k) for k in rs_dims]
+            delta = self._stage_deltas(chunk_bytes, rs)
+            ag_loads = [loads[k] + delta[k] for k in range(d)]
             ag = [(Phase.AG, k) for k in _sorted_dims(ag_loads, descending=True)]
-        else:
-            ag = [(Phase.AG, k) for k in reversed(rs_dims)]
-        return rs + ag
+            return rs + ag
+        if below:
+            sig = (collective, True)
+        elif collective == "AG":
+            sig = (collective, False, tuple(_sorted_dims(loads, descending=True)))
+        else:  # RS and AR need the ascending permutation only
+            sig = (collective, False, tuple(_sorted_dims(loads, descending=False)))
+        got = self._greedy_cache.get(sig)
+        if got is None:
+            if below:
+                sched = baseline_order(d, collective)
+            elif collective == "RS":
+                sched = [(Phase.RS, k) for k in sig[2]]
+            elif collective == "AG":
+                sched = [(Phase.AG, k) for k in sig[2]]
+            else:  # AR: AG = reverse(RS) (Alg. 1 line 8)
+                sched = ([(Phase.RS, k) for k in sig[2]]
+                         + [(Phase.AG, k) for k in reversed(sig[2])])
+            if len(self._greedy_cache) >= self._CACHE_CAP:
+                self._greedy_cache.clear()
+            got = self._greedy_cache[sig] = tuple(sched)
+        return list(got)
 
     def _pick_by_projection(
         self, collective: str, chunk_bytes: float,
@@ -205,36 +256,47 @@ class ThemisScheduler:
         loads = self.tracker.get_loads()
         best = None
         for cand in candidates:
-            proj = list(loads)
-            for dim, secs in self.latency_model.calc_loads(
-                    chunk_bytes, cand).items():
-                proj[dim] += secs
+            delta = self._stage_deltas(chunk_bytes, cand)
+            proj = [a + b for a, b in zip(loads, delta)]
             key = (max(proj), sum(proj))
-            if best is None or key < best[:2]:
-                best = (*key, cand)
-        return best[2]
+            if best is None or key < best[0]:
+                best = (key, cand)
+        return best[1]
+
+    def _candidate_orders(self, collective: str) -> list[tuple[StageOp, ...]]:
+        """All D! candidate schedules of ``collective`` (memoized)."""
+        got = self._cand_cache.get(collective)
+        if got is None:
+            d = self.latency_model.topology.num_dims
+            cands: list[tuple[StageOp, ...]] = []
+            for perm in itertools.permutations(range(d)):
+                if collective == "RS":
+                    cand = [(Phase.RS, k) for k in perm]
+                elif collective == "AG":
+                    cand = [(Phase.AG, k) for k in perm]
+                else:
+                    cand = [(Phase.RS, k) for k in perm] + [
+                        (Phase.AG, k) for k in reversed(perm)
+                    ]
+                cands.append(tuple(cand))
+            got = self._cand_cache[collective] = cands
+        return got
 
     def _lookahead_order(self, collective: str, chunk_bytes: float) -> list[StageOp]:
-        d = self.latency_model.topology.num_dims
+        """D! enumeration with memoized per-candidate load deltas: after the
+        first chunk of a size, each candidate evaluation is a vector add +
+        max — the winner itself depends on the current load values, so it is
+        re-picked per chunk (rank-only memoization would change decisions)."""
         loads = self.tracker.get_loads()
-        best: tuple[float, float, list[StageOp]] | None = None
-        for perm in itertools.permutations(range(d)):
-            if collective == "RS":
-                cand = [(Phase.RS, k) for k in perm]
-            elif collective == "AG":
-                cand = [(Phase.AG, k) for k in perm]
-            else:
-                cand = [(Phase.RS, k) for k in perm] + [
-                    (Phase.AG, k) for k in reversed(perm)
-                ]
-            proj = list(loads)
-            for dim, secs in self.latency_model.calc_loads(chunk_bytes, cand).items():
-                proj[dim] += secs
+        best: tuple[tuple[float, float], tuple[StageOp, ...]] | None = None
+        for cand in self._candidate_orders(collective):
+            delta = self._stage_deltas(chunk_bytes, cand)
+            proj = [a + b for a, b in zip(loads, delta)]
             key = (max(proj), sum(proj))
-            if best is None or key < best[:2]:
-                best = (*key, cand)
+            if best is None or key < best[0]:
+                best = (key, cand)
         assert best is not None
-        return best[2]
+        return list(best[1])
 
 
 def schedule_collective(

@@ -34,7 +34,23 @@ and may **preempt** an in-flight multi-chunk service at chunk granularity —
 chunks whose data has not started draining are returned to the ready queue
 so a higher-share tenant does not wait behind a 1 GB collective.  Byte
 conservation holds across preemptions: every chunk stage is eventually
-served exactly once.
+served exactly once.  A non-zero ``preempt_penalty_s`` charges a re-arm
+latency: requeued chunks only become ready again ``penalty`` seconds after
+the split (splitting is free by default for backward compatibility).
+
+Two engines implement identical semantics:
+
+  * ``engine="indexed"`` (default) — struct-of-arrays task storage with
+    integer handles, per-dim indexed priority queues (heaps keyed by the
+    active discipline) and per-(dim, tenant) bucket heaps for the arbiter's
+    quantum batching, so a service start is O(batch x log n) instead of a
+    full-queue sort + O(n) removes.  Near-linear in total stage-ops.
+  * ``engine="reference"`` — the original list-sorting event loop, kept
+    reachable as the differential-testing oracle.
+
+Both engines consume the shared tie-break/jitter sequence in the same
+order, so makespans, per-dim wire bytes, service orders and per-request
+finish times are bit-identical (``benchmarks/sched_perf.py`` gates on it).
 
 Outputs makespan, per-dim busy time / wire bytes, BW utilization (the
 paper's weighted-average metric), per-dim activity timelines (Fig. 9),
@@ -50,12 +66,20 @@ from dataclasses import dataclass, field
 from repro.core.chunking import Chunk
 from repro.core.latency_model import LatencyModel
 from repro.core.requests import CollectiveRequest
-from repro.topology import Topology
+from repro.topology import Phase, Topology
 
 OpId = tuple[int, int]  # (chunk_id, stage_idx)
 
 # One served batch on a dimension: (start, end, group ids carried).
 ServiceInterval = tuple[float, float, tuple[int, ...]]
+
+ENGINES = ("indexed", "reference")
+
+# Arbiter policies the indexed engine can map onto per-(dim, tenant) bucket
+# heaps.  Anything else (a custom duck-typed arbiter with its own order_key)
+# falls back to the reference engine, which honors arbitrary keys.
+_INDEXABLE_ARBITER_POLICIES = ("fifo", "strict-priority", "weighted-fair",
+                               "slo-aware")
 
 
 @dataclass
@@ -78,14 +102,18 @@ class StageTask:
 
 @dataclass
 class _Service:
-    """One in-flight batch on a dimension — the unit of preemption."""
+    """One in-flight batch on a dimension — the unit of preemption.
+
+    ``batch`` holds :class:`StageTask`s in the reference engine and integer
+    task handles in the indexed engine.
+    """
 
     sid: int                   # event validity token; bumped on preemption
     dim: int
     start: float
     end: float
     rate: float                # effective drain rate, bytes/s (incl. jitter)
-    batch: list[StageTask]
+    batch: list
     svc_idx: int               # index of this service in dim_services[dim]
 
 
@@ -174,6 +202,15 @@ class SimResult:
         """Finish time of the last request (drain point of all streams)."""
         return max(self.group_finish) if self.group_finish else self.makespan
 
+    def diff_fields(self, other: "SimResult") -> list[str]:
+        """Names of fields that differ from ``other`` — the single source of
+        truth for the engine bit-equivalence gate (benchmarks and tests both
+        assert this returns [])."""
+        import dataclasses
+
+        return [f.name for f in dataclasses.fields(self)
+                if getattr(self, f.name) != getattr(other, f.name)]
+
     def groups_interleave_on(self, dim: int) -> bool:
         """True if the service order on ``dim`` switches between distinct
         groups and back — i.e. collectives genuinely contend rather than
@@ -219,6 +256,35 @@ def _build_tasks(
     return tasks
 
 
+def _resolve_penalty(preempt_penalty_s: float | None, arbiter) -> float:
+    """Explicit argument wins; otherwise the arbiter's attribute; else 0."""
+    if preempt_penalty_s is None:
+        preempt_penalty_s = getattr(arbiter, "preempt_penalty_s", 0.0) or 0.0
+    if preempt_penalty_s < 0:
+        raise ValueError("preempt_penalty_s must be >= 0")
+    return preempt_penalty_s
+
+
+def _arbiter_indexable(arbiter) -> bool:
+    """Can the indexed engine replicate this arbiter's queue ordering?
+
+    The indexed engine never calls ``order_key`` — it hardcodes each known
+    policy's canonical key into its bucket heaps — so it may only take
+    arbiters whose ``order_key`` is the stock ``FabricArbiter`` one.  A
+    subclass overriding ``order_key`` (or any non-FabricArbiter duck type)
+    falls back to the reference engine, which honors arbitrary keys.  The
+    remaining hooks (``should_preempt``/``on_served``/...) are invoked on
+    both engines, so overriding those stays indexable.
+    """
+    if getattr(arbiter, "policy", None) not in _INDEXABLE_ARBITER_POLICIES:
+        return False
+    # Lazy import: repro.tenancy depends on repro.core, not vice versa.
+    from repro.tenancy.arbiter import FabricArbiter
+
+    return (isinstance(arbiter, FabricArbiter)
+            and type(arbiter).order_key is FabricArbiter.order_key)
+
+
 def simulate(
     topology: Topology,
     chunk_groups: list[list[Chunk]],
@@ -234,6 +300,8 @@ def simulate(
     tenants: list[str] | None = None,
     streams: list[str] | None = None,
     arbiter=None,
+    preempt_penalty_s: float | None = None,
+    engine: str = "indexed",
 ) -> SimResult:
     """Simulate one or more collectives (``chunk_groups``).
 
@@ -257,13 +325,23 @@ def simulate(
         ``arbiter.preemption`` — may split an in-flight service at chunk
         granularity, requeueing chunks whose data has not started draining.
         Mutually exclusive with ``enforced_order``.
+    ``preempt_penalty_s``: re-arm latency charged to preempted chunks — they
+        re-arrive ``penalty`` seconds after the split instead of instantly.
+        ``None`` defers to ``arbiter.preempt_penalty_s`` (default 0.0:
+        splits are free, the pre-penalty behavior).
+    ``engine``: 'indexed' (default; near-linear in stage-ops) or
+        'reference' (the original O(n^2)-per-dim loop, kept as the
+        differential-testing oracle).  Both produce bit-identical results;
+        a custom arbiter the indexed engine cannot bucket-index falls back
+        to 'reference' automatically.
     """
-    import random
-
-    rng = random.Random(seed)
-    lm = LatencyModel(topology)
-    num_dims = topology.num_dims
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; want {ENGINES}")
     n_groups = len(chunk_groups)
+    if n_groups and isinstance(chunk_groups[0], Chunk):
+        raise TypeError(
+            "simulate() expected a list of chunk groups (list[list[Chunk]]), "
+            "got a flat chunk list; wrap it in [chunks]")
     if issue_times is None:
         issue_times = [0.0] * n_groups
     if priorities is None:
@@ -278,6 +356,46 @@ def simulate(
         raise ValueError("tenants/streams must match chunk_groups")
     if arbiter is not None and enforced_order is not None:
         raise ValueError("arbiter and enforced_order are mutually exclusive")
+    penalty = _resolve_penalty(preempt_penalty_s, arbiter)
+
+    if engine == "indexed" and (arbiter is None or _arbiter_indexable(arbiter)):
+        impl = _simulate_indexed
+    else:
+        impl = _simulate_reference
+    return impl(
+        topology, chunk_groups, issue_times=issue_times,
+        priorities=priorities, intra=intra, fusion=fusion,
+        fusion_limit=fusion_limit, enforced_order=enforced_order,
+        jitter=jitter, seed=seed, tenants=tenants, streams=streams,
+        arbiter=arbiter, penalty=penalty)
+
+
+# ---------------------------------------------------------------------------
+# Reference engine — the original list-sorting event loop (oracle).
+# ---------------------------------------------------------------------------
+def _simulate_reference(
+    topology: Topology,
+    chunk_groups: list[list[Chunk]],
+    *,
+    issue_times: list[float],
+    priorities: list[int],
+    intra: str,
+    fusion: bool,
+    fusion_limit: int,
+    enforced_order: list[list[OpId]] | None,
+    jitter: float,
+    seed: int,
+    tenants: list[str],
+    streams: list[str],
+    arbiter,
+    penalty: float,
+) -> SimResult:
+    import random
+
+    rng = random.Random(seed)
+    lm = LatencyModel(topology)
+    num_dims = topology.num_dims
+    n_groups = len(chunk_groups)
 
     tasks: dict[OpId, StageTask] = {}
     group_of_chunk: dict[int, int] = {}
@@ -463,8 +581,13 @@ def simulate(
         a = max(t.fixed_delay for t in keep)
         heapq.heappush(events, (new_end, next(seq), "free", (dim, svc.sid)))
         heapq.heappush(events, (new_end + a, next(seq), "done", (dim, svc.sid)))
-        for t in cut:
-            queues[dim].append(t)
+        if penalty > 0:
+            # Re-arm latency: preempted chunks re-arrive after the penalty.
+            for t in cut:
+                push_ready(t, now + penalty)
+        else:
+            for t in cut:
+                queues[dim].append(t)
         arbiter.on_preempted(dim, cut, now)
 
     makespan = max(issue_times) if issue_times else 0.0
@@ -518,6 +641,386 @@ def simulate(
                      list(streams), list(tenants), group_wire)
 
 
+# ---------------------------------------------------------------------------
+# Indexed engine — struct-of-arrays tasks + indexed priority queues.
+# ---------------------------------------------------------------------------
+def _simulate_indexed(
+    topology: Topology,
+    chunk_groups: list[list[Chunk]],
+    *,
+    issue_times: list[float],
+    priorities: list[int],
+    intra: str,
+    fusion: bool,
+    fusion_limit: int,
+    enforced_order: list[list[OpId]] | None,
+    jitter: float,
+    seed: int,
+    tenants: list[str],
+    streams: list[str],
+    arbiter,
+    penalty: float,
+) -> SimResult:
+    """Same semantics as :func:`_simulate_reference`, near-linear cost.
+
+    Tasks live in preallocated parallel arrays (struct-of-arrays) addressed
+    by integer handles; each dimension's ready queue is an indexed priority
+    queue — a binary heap whose entries embed the discipline key, so a
+    service start pops its batch in O(batch x log n) instead of sorting the
+    whole queue and removing served tasks one by one.  Under an arbiter the
+    queue is a per-(dim, tenant) bucket of heaps: quantum batching pops the
+    winning tenant's bucket, and preemption pushes cut chunks back into it.
+
+    Bit-equivalence with the reference engine is by construction: the
+    tie-break counter (``seq``) and the jitter RNG are consumed in exactly
+    the same order, heap keys replicate the reference sort keys (every key
+    ends in the unique arrival seq, so total order is identical), and float
+    accumulations run in the same sequence.
+    """
+    import random
+
+    rng = random.Random(seed)
+    lm = LatencyModel(topology)
+    tbl = lm.stage_tables
+    num_dims = topology.num_dims
+    n_groups = len(chunk_groups)
+    rs_phase = Phase.RS
+
+    # ---- struct-of-arrays task storage (integer handles) -------------------
+    n_tasks = sum(len(c.schedule) for g in chunk_groups for c in g)
+    t_chunk = [0] * n_tasks    # global chunk id
+    t_stage = [0] * n_tasks
+    t_dim = [0] * n_tasks
+    t_wire = [0.0] * n_tasks
+    t_fixed = [0.0] * n_tasks
+    t_group = [0] * n_tasks
+    t_prio = [0] * n_tasks
+    t_tenant = [""] * n_tasks
+    t_arr = [0] * n_tasks      # arrival seq (assigned when readied)
+    t_last = [False] * n_tasks  # final stage of its chunk's chain?
+    first_handles: list[int] = []   # stage-0 handle per chunk, build order
+    group_wire = [0.0] * n_groups
+    h = 0
+    offset = 0  # global chunk-id offset, same scheme as the reference engine
+    for g, group in enumerate(chunk_groups):
+        prio = priorities[g]
+        tenant = tenants[g]
+        gw = 0.0
+        for chunk in group:
+            size = chunk.size_bytes
+            sched = chunk.schedule
+            cid = chunk.index + offset
+            if sched:
+                first_handles.append(h)
+            for s, (phase, dim) in enumerate(sched):
+                n = tbl.npus[dim]
+                if n <= 1:
+                    wire = 0.0
+                elif phase == rs_phase:
+                    wire = tbl.rs_wire[dim] * size
+                    size = size / n
+                else:
+                    wire = tbl.ag_wire[dim] * size
+                    size = size * n
+                t_chunk[h] = cid
+                t_stage[h] = s
+                t_dim[h] = dim
+                t_wire[h] = wire
+                t_fixed[h] = (tbl.rs_step[dim] if phase == rs_phase
+                              else tbl.ag_step[dim])
+                t_group[h] = g
+                t_prio[h] = prio
+                t_tenant[h] = tenant
+                gw += wire
+                h += 1
+            if sched:
+                t_last[h - 1] = True
+        group_wire[g] = gw
+        if group:
+            offset += max(c.index for c in group) + 1
+
+    # ---- per-dim state ------------------------------------------------------
+    busy_until = [0.0] * num_dims
+    dim_busy = [0.0] * num_dims
+    dim_wire = [0.0] * num_dims
+    # Served op ids, one list per service (parallel to dim_services) — a
+    # preemption replaces its own service's list instead of filtering the
+    # whole per-dim history (which made preemption storms quadratic).  The
+    # flat per-dim order is concatenated at the end; a preempted service is
+    # always the tail segment of its dim's history at split time, so the
+    # concatenation equals the reference engine's incremental filtering.
+    svc_ops: list[list[list[OpId]]] = [[] for _ in range(num_dims)]
+    dim_services: list[list[ServiceInterval]] = [[] for _ in range(num_dims)]
+    activity: list[list[tuple[float, float]]] = [[] for _ in range(num_dims)]
+    pending_since: list[float | None] = [None] * num_dims
+    enforced_pos = [0] * num_dims
+    qlen = [0] * num_dims
+    group_finish = [t for t in issue_times]
+    seq = itertools.count()
+    services: dict[int, _Service] = {}
+    inflight: list[_Service | None] = [None] * num_dims
+    events: list[tuple] = []
+    dim_bw = tbl.bw
+
+    # Ready-queue index, one flavor per mode:
+    #  * plain: per-dim heap keyed by the intra discipline;
+    #  * arbiter: per-(dim, tenant) bucket heaps (quantum batching / preempt
+    #    requeue pop and push per-tenant);
+    #  * enforced: per-dim {op_id: handle} map (service order is dictated,
+    #    so the "queue" only answers membership).
+    use_arbiter = arbiter is not None
+    use_enforced = enforced_order is not None
+    scf = intra == "SCF"
+    heaps: list[list] = [[] for _ in range(num_dims)]
+    buckets: list[dict[str, list]] = [{} for _ in range(num_dims)]
+    ready_map: list[dict[OpId, int]] = [{} for _ in range(num_dims)]
+    if use_arbiter:
+        arb_policy = arbiter.policy
+        arb_fair = arb_policy in ("weighted-fair", "slo-aware")
+        arb_quantum = max(1, getattr(arbiter, "quantum_chunks", 1))
+        arb_preempt = getattr(arbiter, "preemption", False)
+        arb_vt = arbiter.virtual_time
+        # StageTask views handed to arbiter hooks (materialized lazily).
+        views: list[StageTask | None] = [None] * n_tasks
+
+        def view(hh: int) -> StageTask:
+            v = views[hh]
+            if v is None:
+                v = views[hh] = StageTask(
+                    chunk_id=t_chunk[hh], stage_idx=t_stage[hh],
+                    dim=t_dim[hh], wire_bytes=t_wire[hh],
+                    fixed_delay=t_fixed[hh], group=t_group[hh],
+                    priority=t_prio[hh], tenant=t_tenant[hh])
+            v.arrival_seq = t_arr[hh]
+            return v
+
+    def push_ready(hh: int, t: float) -> None:
+        s = next(seq)
+        t_arr[hh] = s
+        heapq.heappush(events, (t, s, 0, hh))  # kind 0 = ready
+
+    for hh in first_handles:
+        push_ready(hh, issue_times[t_group[hh]])
+
+    def enqueue(hh: int) -> None:
+        dim = t_dim[hh]
+        qlen[dim] += 1
+        if use_arbiter:
+            b = buckets[dim]
+            tn = t_tenant[hh]
+            heap = b.get(tn)
+            if heap is None:
+                heap = b[tn] = []
+            if arb_fair:
+                heapq.heappush(heap, (t_wire[hh], t_arr[hh], hh))
+            else:  # fifo / strict-priority order by arrival within a tenant
+                heapq.heappush(heap, (t_arr[hh], hh))
+        elif use_enforced:
+            ready_map[dim][(t_chunk[hh], t_stage[hh])] = hh
+        elif scf:
+            heapq.heappush(heaps[dim],
+                           (-t_prio[hh], t_wire[hh], t_arr[hh], hh))
+        else:
+            heapq.heappush(heaps[dim], (-t_prio[hh], t_arr[hh], hh))
+
+    def select_batch(dim: int, now: float) -> list[int]:
+        if not qlen[dim]:
+            return []
+        if use_arbiter:
+            b = buckets[dim]
+            best_tn = None
+            best_key = None
+            # The reference sorts the whole queue by arbiter.order_key and
+            # serves the head tenant; here the winning tenant is the min
+            # over bucket heads of the same key (within a tenant the key is
+            # static, so the bucket heap order equals the sorted order).
+            for tn, heap in b.items():
+                head = heap[0]
+                if arb_fair:
+                    key = (arb_vt(dim, tn), head[0], head[1])
+                elif arb_policy == "strict-priority":
+                    key = (-arbiter.spec(tn).priority, head[0])
+                else:  # fifo
+                    key = (head[0],)
+                if best_key is None or key < best_key:
+                    best_key, best_tn = key, tn
+            heap = b[best_tn]
+            batch = []
+            while heap and len(batch) < arb_quantum:
+                batch.append(heapq.heappop(heap)[-1])
+            if not heap:
+                del b[best_tn]
+            qlen[dim] -= len(batch)
+            return batch
+        if use_enforced:
+            order = enforced_order[dim]
+            pos = enforced_pos[dim]
+            if pos >= len(order):
+                return []
+            rm = ready_map[dim]
+            h0 = rm.get(order[pos])
+            if h0 is None:
+                return []  # idle until the mandated op arrives
+            batch = [h0]
+            if fusion:
+                sat = t_fixed[h0] * dim_bw[dim]
+                total = t_wire[h0]
+                p = pos + 1
+                while (total < sat and len(batch) < fusion_limit
+                       and p < len(order) and order[p] in rm):
+                    hh = rm[order[p]]
+                    batch.append(hh)
+                    total += t_wire[hh]
+                    p += 1
+            for hh in batch:
+                del rm[(t_chunk[hh], t_stage[hh])]
+            enforced_pos[dim] += len(batch)
+            qlen[dim] -= len(batch)
+            return batch
+        heap = heaps[dim]
+        h0 = heapq.heappop(heap)[-1]
+        batch = [h0]
+        if fusion:
+            sat = t_fixed[h0] * dim_bw[dim]
+            total = t_wire[h0]
+            while heap and total < sat and len(batch) < fusion_limit:
+                hh = heapq.heappop(heap)[-1]
+                batch.append(hh)
+                total += t_wire[hh]
+        qlen[dim] -= len(batch)
+        return batch
+
+    def try_start(dim: int, now: float) -> None:
+        if busy_until[dim] > now:
+            return
+        batch = select_batch(dim, now)
+        if not batch:
+            return
+        a = 0.0
+        wire = 0.0
+        for hh in batch:
+            if t_fixed[hh] > a:
+                a = t_fixed[hh]
+            wire += t_wire[hh]
+        occupy = wire / dim_bw[dim]
+        if jitter:
+            occupy *= 1.0 + jitter * rng.random()
+        free_at = now + occupy
+        busy_until[dim] = free_at
+        dim_busy[dim] += occupy
+        dim_wire[dim] += wire
+        svc_ops[dim].append([(t_chunk[hh], t_stage[hh]) for hh in batch])
+        svc = _Service(
+            sid=next(seq), dim=dim, start=now, end=free_at,
+            rate=(wire / occupy) if occupy > 0 else float("inf"),
+            batch=batch, svc_idx=len(dim_services[dim]))
+        dim_services[dim].append(
+            (now, free_at, tuple(sorted({t_group[hh] for hh in batch}))))
+        services[svc.sid] = svc
+        inflight[dim] = svc
+        if use_arbiter:
+            arbiter.on_served(dim, [view(hh) for hh in batch], now)
+        heapq.heappush(events, (free_at, next(seq), 1, (dim, svc.sid)))
+        heapq.heappush(events, (free_at + a, next(seq), 2, (dim, svc.sid)))
+
+    def maybe_preempt(dim: int, cand: int, now: float) -> None:
+        svc = inflight[dim]
+        if svc is None or len(svc.batch) <= 1:
+            return
+        if not arbiter.should_preempt(dim, view(svc.batch[0]), view(cand), now):
+            return
+        elapsed_bytes = (now - svc.start) * svc.rate
+        keep = [svc.batch[0]]
+        acc = t_wire[svc.batch[0]]
+        for hh in svc.batch[1:]:
+            if acc >= elapsed_bytes:  # this chunk has not started draining
+                break
+            keep.append(hh)
+            acc += t_wire[hh]
+        cut = svc.batch[len(keep):]
+        if not cut:
+            return
+        new_end = svc.start + acc / svc.rate
+        dim_busy[dim] -= svc.end - new_end
+        dim_wire[dim] -= sum(t_wire[hh] for hh in cut)
+        busy_until[dim] = new_end
+        svc_ops[dim][svc.svc_idx] = [(t_chunk[hh], t_stage[hh])
+                                     for hh in keep]
+        s0 = dim_services[dim][svc.svc_idx][0]
+        dim_services[dim][svc.svc_idx] = (
+            s0, new_end, tuple(sorted({t_group[hh] for hh in keep})))
+        services.pop(svc.sid)
+        svc.sid = next(seq)
+        svc.end = new_end
+        svc.batch = keep
+        services[svc.sid] = svc
+        a = max(t_fixed[hh] for hh in keep)
+        heapq.heappush(events, (new_end, next(seq), 1, (dim, svc.sid)))
+        heapq.heappush(events, (new_end + a, next(seq), 2, (dim, svc.sid)))
+        if penalty > 0:
+            for hh in cut:
+                push_ready(hh, now + penalty)
+        else:
+            for hh in cut:
+                enqueue(hh)
+        arbiter.on_preempted(dim, [view(hh) for hh in cut], now)
+
+    makespan = max(issue_times) if issue_times else 0.0
+    while events:
+        now, _, kind, payload = heapq.heappop(events)
+        if kind == 0:  # ready
+            if now > makespan:
+                makespan = now
+            hh = payload
+            dim = t_dim[hh]
+            if pending_since[dim] is None:
+                pending_since[dim] = now
+            enqueue(hh)
+            if use_arbiter and arb_preempt and busy_until[dim] > now:
+                maybe_preempt(dim, hh, now)
+            try_start(dim, now)
+        elif kind == 1:  # free
+            dim, sid = payload
+            if sid not in services:
+                continue  # stale: service was preempted and rescheduled
+            if now > makespan:
+                makespan = now
+            cur = inflight[dim]
+            if cur is not None and cur.sid == sid:
+                inflight[dim] = None
+            if not qlen[dim] and pending_since[dim] is not None:
+                activity[dim].append((pending_since[dim], now))
+                pending_since[dim] = None
+            try_start(dim, now)
+        else:  # done — chunk's next stage becomes ready
+            dim, sid = payload
+            svc = services.pop(sid, None)
+            if svc is None:
+                continue  # stale: service was preempted and rescheduled
+            if now > makespan:
+                makespan = now
+            for hh in svc.batch:
+                if not t_last[hh]:
+                    push_ready(hh + 1, now)  # stages are contiguous handles
+                else:
+                    g = t_group[hh]
+                    if group_finish[g] < now:  # chunk chain retired
+                        group_finish[g] = now
+                        if use_arbiter:
+                            arbiter.on_group_finish(
+                                g, t_tenant[hh], now - issue_times[g])
+
+    for dim in range(num_dims):
+        if pending_since[dim] is not None:  # pragma: no cover - safety
+            activity[dim].append((pending_since[dim], makespan))
+
+    dim_order: list[list[OpId]] = [
+        [op for ops in svc_ops[dim] for op in ops] for dim in range(num_dims)]
+    return SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
+                     dim_services, list(issue_times), group_finish,
+                     list(streams), list(tenants), group_wire)
+
+
 def simulate_scheduled(
     topology: Topology,
     collective: str,
@@ -528,6 +1031,7 @@ def simulate_scheduled(
     intra: str = "SCF",
     fusion: bool = True,
     water_filling: bool = False,
+    engine: str = "indexed",
 ) -> tuple[SimResult, list[Chunk]]:
     """Schedule one collective with ``policy`` and simulate it."""
     from repro.core.scheduler import schedule_collective
@@ -540,7 +1044,8 @@ def simulate_scheduled(
         policy,
         water_filling=water_filling,
     )
-    res = simulate(topology, [chunks], intra=intra, fusion=fusion)
+    res = simulate(topology, [chunks], intra=intra, fusion=fusion,
+                   engine=engine)
     return res, chunks
 
 
@@ -554,6 +1059,8 @@ def simulate_requests(
     fusion: bool = True,
     water_filling: bool = False,
     arbiter=None,
+    preempt_penalty_s: float | None = None,
+    engine: str = "indexed",
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Online entry point: schedule and simulate an arrival-time-aware
     request stream.
@@ -587,5 +1094,7 @@ def simulate_requests(
         tenants=[r.tenant for r in requests],
         streams=[r.stream for r in requests],
         arbiter=arbiter,
+        preempt_penalty_s=preempt_penalty_s,
+        engine=engine,
     )
     return res, groups

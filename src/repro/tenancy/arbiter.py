@@ -47,6 +47,12 @@ class FabricArbiter:
     ``isolated_latency`` maps tenant -> mean isolated request latency
     (seconds), the reference the slo-aware policy measures slowdown
     against; tenants absent from the map are treated as meeting their SLO.
+
+    ``preempt_penalty_s`` is the re-arm latency a preemption charges: the
+    chunks cut from an in-flight service only become ready again that many
+    seconds after the split (modeling the cost of tearing down and
+    re-issuing the collective).  0.0 — the default, for backward
+    compatibility — keeps splits free.
     """
 
     def __init__(
@@ -57,17 +63,21 @@ class FabricArbiter:
         preemption: bool = True,
         quantum_chunks: int = 8,
         isolated_latency: Mapping[str, float] | None = None,
+        preempt_penalty_s: float = 0.0,
     ):
         if policy not in ARBITER_POLICIES:
             raise ValueError(
                 f"unknown arbiter policy {policy!r}; want {ARBITER_POLICIES}")
         if quantum_chunks < 1:
             raise ValueError("quantum_chunks must be >= 1")
+        if preempt_penalty_s < 0:
+            raise ValueError("preempt_penalty_s must be >= 0")
         self.policy = policy
         self.specs: dict[str, TenantSpec] = {s.name: s for s in specs}
         # FIFO never reorders, so preempting would be pure overhead.
         self.preemption = preemption and policy != "fifo"
         self.quantum_chunks = quantum_chunks
+        self.preempt_penalty_s = preempt_penalty_s
         self.isolated_latency = dict(isolated_latency or {})
         self._served: dict[tuple[int, str], float] = {}  # (dim, tenant) -> bytes
         # Virtual time accrues *at service time* (bytes / weight-then), so a

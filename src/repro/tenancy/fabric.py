@@ -67,13 +67,16 @@ def simulate_fabric(
     intra: str = "SCF",
     fusion: bool = True,
     water_filling: bool = False,
+    engine: str = "indexed",
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Schedule and simulate a multi-tenant stream on one shared fabric.
 
     ``arbiter`` (a :class:`~repro.tenancy.arbiter.FabricArbiter`) supplies
     the inter-tenant per-dim discipline and preemption; ``None`` falls back
     to the single-job ``intra`` discipline, i.e. tenants share dims but no
-    policy arbitrates between them.
+    policy arbitrates between them.  Its ``preempt_penalty_s`` sets the
+    re-arm latency preempted chunks pay before requeueing.  ``engine``
+    selects the simulator engine (see :func:`repro.core.simulator.simulate`).
     """
     groups = schedule_tenant_requests(
         topology, requests, policy=policy, shared_tracker=shared_tracker,
@@ -89,6 +92,7 @@ def simulate_fabric(
         tenants=[r.tenant for r in requests],
         streams=[r.stream for r in requests],
         arbiter=arbiter,
+        engine=engine,
     )
     return res, groups
 
