@@ -3,6 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV.  ``us_per_call`` is the wall time
 of the underlying simulator/compile call; ``derived`` carries the metric the
 paper reports (speedups, utilizations, roofline terms).
+
+``--profile`` wraps the selected studies in cProfile and prints the top-20
+cumulative-time hotspots after the CSV — the profile-then-vectorize
+workflow: find the hot loop before optimizing it (see ``repro.core.batch``
+for the pass that came out of it).
 """
 import sys
 
@@ -21,6 +26,7 @@ def main() -> None:
         roofline_table,
         sched_perf,
         tenancy_study,
+        topo_search,
     )
     from benchmarks.common import print_rows
 
@@ -33,17 +39,49 @@ def main() -> None:
         ("overlap", overlap_study),
         ("tenancy", tenancy_study),
         ("sched_perf", sched_perf),
+        ("topo_search", topo_search),
         ("insights", insights_study),
         ("beyond", beyond_paper),
         ("roofline", roofline_table),
         ("kernels", kernels_bench),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    print("name,us_per_call,derived")
-    for name, mod in mods:
-        if only and name != only:
-            continue
-        print_rows(mod.run())
+    import inspect
+
+    flags = [a for a in sys.argv[1:] if a.startswith("--")]
+    unknown = [f for f in flags if f not in ("--profile", "--quick")]
+    if unknown:
+        raise SystemExit(
+            f"unknown flag(s) {unknown}; supported: --profile, --quick")
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    profile = "--profile" in flags
+    quick = "--quick" in flags
+    only = args[0] if args else None
+
+    def run_selected() -> None:
+        print("name,us_per_call,derived")
+        for name, mod in mods:
+            if only and name != only:
+                continue
+            if quick:
+                if "quick" not in inspect.signature(mod.run).parameters:
+                    raise SystemExit(
+                        f"study {name!r} has no quick mode; drop --quick")
+                print_rows(mod.run(quick=True))
+            else:
+                print_rows(mod.run())
+
+    if profile:
+        import cProfile
+        import pstats
+
+        prof = cProfile.Profile()
+        prof.enable()
+        run_selected()
+        prof.disable()
+        print("\n# --profile: top-20 cumulative hotspots")
+        pstats.Stats(prof).sort_stats("cumulative").print_stats(20)
+    else:
+        run_selected()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,293 @@
+"""Fleet-batch + topology-search study.
+
+Three parts, all emitted into ``BENCH_topo_search.json``:
+
+  * **equivalence gate** — a pinned scenario grid across scheduling
+    policies x intra disciplines x arbiters x jitter seeds, each run via
+    ``simulate_batch`` and standalone (``simulate_scenario``, the
+    un-amortized ``engine="indexed"`` path); every ``SimResult`` field
+    must be **bit-identical**.  Any mismatch raises, failing CI.
+  * **fleet throughput** — a topology-search scoring batch (candidate BW
+    splits x jitter seeds, water-filling schedules) of >= 64 scenarios,
+    timed through ``simulate_batch`` vs a loop of individual
+    ``simulate()`` calls.  The batch path shares the scheduling pass and
+    SoA task build across each candidate's seeds; the full run asserts
+    >= 5x scenarios/sec (quick mode backstops at >= 3x — sub-second
+    timings on shared CI runners are too noisy for the tight gate).
+  * **search study** — the LIBRA-style searcher over 2D and 3D fabrics
+    for a ResNet-152 gradient-bucket burst and a two-tenant mix; asserts
+    the searched fabric beats the hand-built default's makespan on >= 1
+    workload, and reports the policy contrast (the searched-split surplus
+    under static baseline scheduling vs Themis — Themis recovers most of
+    a bad split, the paper's Sec. 6.3 robustness story, quantified).
+
+Run standalone (``python -m benchmarks.topo_search [--quick]``) or via
+``python -m benchmarks.run topo_search``.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+from benchmarks.common import row
+from repro.core.batch import BatchCaches, Scenario, simulate_batch, simulate_scenario
+from repro.core.requests import CollectiveRequest
+from repro.core.workloads import dp_bucket_requests, make_resnet152
+from repro.tenancy import FabricArbiter, TenantSpec, synthetic_requests
+from repro.topology import (
+    SearchConfig,
+    bw_split_topology,
+    enumerate_bw_shares,
+    make_table2_topologies,
+    make_tpu_pod_topology,
+    search_topologies,
+)
+
+MB = 1e6
+OUT_JSON = Path(__file__).resolve().parents[1] / "BENCH_topo_search.json"
+
+
+def _assert_equal(res_a, res_b, label: str) -> None:
+    bad = res_a.diff_fields(res_b)
+    if bad:
+        raise AssertionError(
+            f"batch equivalence violated on {label}: fields {bad} differ "
+            f"between simulate_batch and standalone engine='indexed'")
+
+
+def _resnet_burst(n_buckets: int) -> tuple[CollectiveRequest, ...]:
+    """ResNet-152 gradient buckets issued as one sync batch (comm-bound)."""
+    return tuple(CollectiveRequest("AR", r.size_bytes)
+                 for r in dp_bucket_requests(make_resnet152(), n_buckets))
+
+
+def _resnet_stream(n_buckets: int) -> tuple[CollectiveRequest, ...]:
+    """The overlap-engine bucket stream (issues spread through backprop)."""
+    return tuple(dp_bucket_requests(make_resnet152(), n_buckets))
+
+
+def _tenant_mix() -> tuple[CollectiveRequest, ...]:
+    """Two tenants on one fabric: ResNet buckets + a periodic AR stream."""
+    heavy = [CollectiveRequest(r.collective, r.size_bytes,
+                               issue_time=r.issue_time, tenant="train",
+                               stream=r.stream)
+             for r in dp_bucket_requests(make_resnet152(), 6)]
+    light = synthetic_requests("svc", "AR", 6 * MB, 6, gap_s=4e-4)
+    return tuple(sorted(heavy + light,
+                        key=lambda r: (r.issue_time, r.tenant)))
+
+
+# ---------------------------------------------------------------------------
+# Equivalence gate: simulate_batch vs standalone indexed engine
+# ---------------------------------------------------------------------------
+def equivalence_gate(quick: bool) -> list[str]:
+    topos = make_table2_topologies()
+    specs = [TenantSpec("train", weight=2.0),
+             TenantSpec("svc", weight=1.0, priority=1, slo_slowdown=1.5)]
+    scenarios: list[tuple[str, Scenario]] = []
+    policies = ("themis", "baseline") if quick else (
+        "themis", "baseline", "themis_guarded")
+    for tname in ("2D-SW_SW", "3D-SW_SW_SW_hetero"):
+        topo = topos[tname]
+        reqs = _resnet_stream(6)
+        for policy in policies:
+            for intra in ("SCF", "FIFO"):
+                for jitter, seed in ((0.0, 0), (0.1, 3)):
+                    scenarios.append((
+                        f"{tname}/{policy}/{intra}/j{jitter}s{seed}",
+                        Scenario(topo, reqs, policy=policy,
+                                 chunks_per_collective=8, intra=intra,
+                                 jitter=jitter, seed=seed)))
+        mix = _tenant_mix()
+        for arb_policy in ("weighted-fair", "slo-aware"):
+            scenarios.append((
+                f"{tname}/arbiter:{arb_policy}",
+                Scenario(topo, mix, chunks_per_collective=8,
+                         arbiter_factory=lambda p=arb_policy: FabricArbiter(
+                             p, specs, quantum_chunks=4))))
+    batch = simulate_batch([sc for _, sc in scenarios])
+    for (label, sc), rb in zip(scenarios, batch):
+        _assert_equal(rb, simulate_scenario(sc), label)
+    return [label for label, _ in scenarios]
+
+
+# ---------------------------------------------------------------------------
+# Fleet throughput: search-scoring batch vs looped simulate()
+# ---------------------------------------------------------------------------
+def fleet_throughput(quick: bool) -> dict:
+    base = make_tpu_pod_topology(2, 8, 8)
+    n_buckets, chunks = (4, 8) if quick else (8, 16)
+    reqs = _resnet_burst(n_buckets)
+    # >= 64 *distinct candidate fabrics* (the acceptance criterion's unit),
+    # each scored under 8 jitter seeds — the robust-scoring setting the
+    # searcher itself uses.  The batch path computes every candidate's
+    # scheduling pass and SoA build once and replays them across that
+    # candidate's seeds; the loop baseline repeats them per scenario.
+    n_candidates, n_seeds = 64, 8
+    granularity = 13  # C(12, 2) = 66 positive 3-dim splits
+    shares = enumerate_bw_shares(base.num_dims, granularity)
+    assert len(shares) >= n_candidates
+    cand_topos = [
+        bw_split_topology(base, tuple(s / granularity for s in sh))
+        for sh in shares[:n_candidates]
+    ]
+    scenarios = [
+        Scenario(topo, reqs, chunks_per_collective=chunks,
+                 water_filling=True, jitter=0.05, seed=seed)
+        for topo in cand_topos for seed in range(n_seeds)
+    ]
+    assert len({sc.topology for sc in scenarios}) >= 64
+
+    t0 = time.perf_counter()
+    res_loop = [simulate_scenario(sc) for sc in scenarios]
+    t_loop = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    res_batch = simulate_batch(scenarios, caches=BatchCaches())
+    t_batch = time.perf_counter() - t0
+
+    for i, (rb, rl) in enumerate(zip(res_batch, res_loop)):
+        _assert_equal(rb, rl, f"throughput scenario {i}")
+    speedup = t_loop / t_batch
+    out = {
+        "n_scenarios": len(scenarios),
+        "n_candidates": n_candidates,
+        "seeds_per_candidate": n_seeds,
+        "n_requests": len(reqs),
+        "chunks_per_collective": chunks,
+        "water_filling": True,
+        "loop_s": t_loop,
+        "batch_s": t_batch,
+        "scenarios_per_sec_loop": len(scenarios) / t_loop,
+        "scenarios_per_sec_batch": len(scenarios) / t_batch,
+        "speedup": speedup,
+        "bit_identical": True,
+    }
+    floor = 3.0 if quick else 5.0
+    if speedup < floor:
+        raise AssertionError(
+            f"fleet batch speedup {speedup:.2f}x < {floor}x over looped "
+            f"simulate() at {len(scenarios)} scenarios")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Search study: does the searched fabric beat the hand-built default?
+# ---------------------------------------------------------------------------
+def _search_one(label, base, reqs, cfg) -> dict:
+    t0 = time.perf_counter()
+    res = search_topologies(base, list(reqs), cfg)
+    return {
+        "label": label,
+        "base": base.name,
+        "policy": cfg.policy,
+        "default_makespan_s": res.default.makespan,
+        "best_makespan_s": res.best.makespan,
+        "improvement": res.improvement,
+        "beats_default": res.best.makespan < res.default.makespan,
+        "best_shares": list(res.best.shares),
+        "best_denom": res.best.denom,
+        "best_perm": list(res.best.perm),
+        "best_bw_utilization": res.best.bw_utilization,
+        "evaluated": len(res.evaluated),
+        "pruned": res.pruned,
+        "scenarios_run": res.scenarios_run,
+        "pareto": [
+            {"makespan_s": c.makespan, "bw_utilization": c.bw_utilization,
+             "shares": list(c.shares), "denom": c.denom,
+             "perm": list(c.perm)}
+            for c in res.pareto
+        ],
+        "search_s": time.perf_counter() - t0,
+    }
+
+
+def search_study(quick: bool) -> dict:
+    topos = make_table2_topologies()
+    rounds, top_k = (1, 3) if quick else (2, 4)
+    chunks = 8 if quick else 16
+    burst = _resnet_burst(6 if quick else 8)
+    runs = [
+        _search_one(
+            "resnet152-burst/3D-tpu-pod/themis",
+            make_tpu_pod_topology(2, 8, 8), burst,
+            SearchConfig(granularity=6, rounds=rounds, top_k=top_k,
+                         chunks_per_collective=chunks)),
+        _search_one(
+            "resnet152-burst/2D-SW_SW/themis",
+            topos["2D-SW_SW"], burst,
+            SearchConfig(granularity=8, rounds=rounds, top_k=top_k,
+                         chunks_per_collective=chunks)),
+        _search_one(
+            "tenant-mix/2D-SW_SW/themis",
+            topos["2D-SW_SW"], _tenant_mix(),
+            SearchConfig(granularity=8, rounds=rounds, top_k=top_k,
+                         chunks_per_collective=chunks)),
+    ]
+    # Policy contrast: the same 2D search under static baseline scheduling.
+    # The searched-split surplus is much larger when the schedule cannot
+    # adapt — Themis absorbs most of a bad BW split (Sec. 6.3).
+    contrast = _search_one(
+        "resnet152-burst/2D-SW_SW/baseline",
+        topos["2D-SW_SW"], burst,
+        SearchConfig(granularity=8, rounds=rounds, top_k=top_k,
+                     chunks_per_collective=chunks, policy="baseline"))
+    out = {
+        "workloads": runs,
+        "baseline_policy_contrast": contrast,
+        "any_beats_default": any(r["beats_default"] for r in runs),
+    }
+    if not out["any_beats_default"]:
+        raise AssertionError(
+            "topology search failed to beat the hand-built default fabric "
+            "on every benchmark workload")
+    return out
+
+
+def run(quick: bool = False):
+    report: dict = {"mode": "quick" if quick else "full"}
+    rows = []
+
+    checked = equivalence_gate(quick)
+    report["equivalence"] = {"scenarios": checked, "ok": True}
+    rows.append(row("topo_search/equivalence", 0.0,
+                    f"{len(checked)} scenarios bit-identical"))
+
+    tp = fleet_throughput(quick)
+    report["throughput"] = tp
+    rows.append(row(
+        f"topo_search/throughput/{tp['n_scenarios']}scenarios",
+        tp["batch_s"] / tp["n_scenarios"] * 1e6,
+        f"speedup={tp['speedup']:.1f}x "
+        f"batch={tp['scenarios_per_sec_batch']:.1f}/s "
+        f"loop={tp['scenarios_per_sec_loop']:.1f}/s"))
+
+    ss = search_study(quick)
+    report["search"] = ss
+    for r in ss["workloads"]:
+        rows.append(row(
+            f"topo_search/search/{r['label']}", r["search_s"] * 1e6,
+            f"improvement={r['improvement']:.3f}x "
+            f"evaluated={r['evaluated']} pruned={r['pruned']}"))
+    c = ss["baseline_policy_contrast"]
+    rows.append(row(
+        f"topo_search/search/{c['label']}", c["search_s"] * 1e6,
+        f"improvement={c['improvement']:.3f}x (static schedule; Themis "
+        f"contrast)"))
+
+    OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
+    rows.append(row("topo_search/json", 0.0, f"json={OUT_JSON.name}"))
+    return rows
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv[1:]
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=quick):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

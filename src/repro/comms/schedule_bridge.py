@@ -53,7 +53,8 @@ def themis_axis_orders(
     if policy in ("baseline", "hier_baseline"):
         rs = [d for ph, d in baseline_order(topo.num_dims, "RS")]
         return [tuple(names[d] for d in rs)] * n_chunks
-    sched = ThemisScheduler(LatencyModel(topo), policy if policy != "themis_scf" else "themis")
+    sched = ThemisScheduler(LatencyModel.for_topology(topo),
+                            policy if policy != "themis_scf" else "themis")
     chunks = sched.schedule_collective("AR", nbytes, n_chunks)
     orders = []
     for c in chunks:
@@ -88,7 +89,8 @@ def themis_axis_orders_stream(
     if issue_times is None:
         issue_times = [0.0] * len(bucket_bytes)
     sched = ThemisScheduler(
-        LatencyModel(topo), policy if policy != "themis_scf" else "themis")
+        LatencyModel.for_topology(topo),
+        policy if policy != "themis_scf" else "themis")
     out: list[list[tuple[str, ...]] | None] = [None] * len(bucket_bytes)
     # schedule in issue order (the tracker clock only moves forward) while
     # returning orders indexed like the input buckets
@@ -108,7 +110,7 @@ def predicted_axis_loads(
 ) -> dict[str, float]:
     """Dim-Load-Tracker view of a chunk-order assignment (seconds/axis)."""
     topo, names = topology_from_axes(axis_sizes)
-    lm = LatencyModel(topo)
+    lm = LatencyModel.for_topology(topo)
     idx = {n: i for i, n in enumerate(names)}
     loads = {n: 0.0 for n in names}
     per_chunk = nbytes / max(len(orders), 1)

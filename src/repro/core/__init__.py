@@ -4,7 +4,7 @@ Scheduling (Algorithm 1), latency model (Sec. 4.4), chunking, consistency
 (Sec. 4.6), the multi-rail simulator used for evaluation, the Fig. 12
 workload models and the Sec. 6.3 provisioning analysis.
 """
-from repro.core.chunking import Chunk, coalesce_by_order, split_equal
+from repro.core.chunking import Chunk, coalesce_by_order, schedule_classes, split_equal
 from repro.core.consistency import fix_intra_dim_order, verify_consistent_execution
 from repro.core.latency_model import LatencyModel, StageOp, stage_transition
 from repro.core.load_tracker import DimLoadTracker
@@ -22,21 +22,39 @@ from repro.core.simulator import (
     simulate_scheduled,
 )
 
+def __getattr__(name):
+    # The batch layer needs numpy; everything else in repro.core is
+    # stdlib-only.  Lazy loading keeps `import repro.core` working in
+    # numpy-less environments for users who never touch it (same pattern
+    # as repro.topology's search symbols).
+    if name in ("BatchCaches", "Scenario", "simulate_batch",
+                "simulate_scenario"):
+        from repro.core import batch
+
+        return getattr(batch, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
+    "BatchCaches",
     "Chunk",
     "CollectiveRequest",
     "DimLoadTracker",
     "LatencyModel",
     "POLICIES",
+    "Scenario",
     "SimResult",
     "StageOp",
     "ThemisScheduler",
     "baseline_order",
     "coalesce_by_order",
     "fix_intra_dim_order",
+    "schedule_classes",
     "schedule_collective",
     "simulate",
+    "simulate_batch",
     "simulate_requests",
+    "simulate_scenario",
     "simulate_scheduled",
     "split_equal",
     "stage_transition",

@@ -33,6 +33,32 @@ def split_equal(collective_bytes: float, chunks_per_collective: int) -> list[Chu
     return [Chunk(i, size) for i in range(chunks_per_collective)]
 
 
+def schedule_classes(chunks: list[Chunk]) -> tuple[list[tuple[float, tuple]], list[int]]:
+    """Group chunks by their (size, schedule) equivalence class.
+
+    Two chunks with the same size and the same stage order produce *exactly*
+    the same per-stage wire bytes and fixed delays, so the per-stage float
+    evaluation only needs to run once per class.  Returns ``(classes,
+    class_of_chunk)`` where ``classes[i]`` is the ``(size_bytes, schedule)``
+    key of class *i* and ``class_of_chunk[j]`` is chunk *j*'s class index,
+    in chunk order.  Equal-split collectives have a handful of classes (one
+    per distinct dim order the scheduler emitted); the vectorized task
+    builder (``repro.core.batch``) broadcasts each class's stage vectors
+    across its members instead of re-deriving them chunk by chunk.
+    """
+    class_idx: dict[tuple, int] = {}
+    classes: list[tuple[float, tuple]] = []
+    class_of_chunk: list[int] = []
+    for c in chunks:
+        key = (c.size_bytes, tuple(c.schedule))
+        got = class_idx.get(key)
+        if got is None:
+            got = class_idx[key] = len(classes)
+            classes.append(key)
+        class_of_chunk.append(got)
+    return classes, class_of_chunk
+
+
 def coalesce_by_order(
     micro_chunks: list[Chunk], max_chunks: int
 ) -> list[Chunk]:

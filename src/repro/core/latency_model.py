@@ -18,7 +18,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import cached_property
-from typing import Sequence
+from typing import ClassVar, Sequence
 
 from repro.topology import Phase, Topology
 
@@ -62,9 +62,41 @@ def stage_transition(phase: Phase, npus: int, size_before: float) -> tuple[float
 
 @dataclass(frozen=True)
 class LatencyModel:
-    """Predicts per-chunk, per-dimension communication latency."""
+    """Predicts per-chunk, per-dimension communication latency.
+
+    Instances are cheap, but :attr:`stage_tables` is not free to rebuild in
+    a loop of ``simulate()`` calls — use :meth:`for_topology` to share one
+    memoized instance per topology (the simulator does this internally).
+    """
 
     topology: Topology
+
+    # Per-topology instance cache (for_topology).  Topology is a frozen
+    # value type, so equality-keyed sharing is safe: a "changed" topology is
+    # a different key, which is the invalidation rule.  Bounded so topology
+    # searches generating thousands of candidates cannot grow it forever.
+    _instances: ClassVar[dict[Topology, "LatencyModel"]] = {}
+    _INSTANCE_CAP: ClassVar[int] = 1024
+    # Monotonic count of StageTables builds — lets tests assert that loops
+    # of simulate() calls stop rebuilding the flat factor tables.
+    stage_table_builds: ClassVar[int] = 0
+
+    @classmethod
+    def for_topology(cls, topology: Topology) -> "LatencyModel":
+        """Shared memoized instance for ``topology`` (stage tables built
+        once per distinct topology, not once per ``simulate()`` call)."""
+        d = cls._instances
+        got = d.pop(topology, None)
+        if got is None:
+            if len(d) >= cls._INSTANCE_CAP:
+                # evict the least-recently-used entry only — clearing
+                # everything would drop hot topologies (the search's base/
+                # incumbent fabrics) along with the candidate churn
+                d.pop(next(iter(d)))
+            got = cls(topology)
+        # (re)insert at the end: dict order is the LRU recency order
+        d[topology] = got
+        return got
 
     # ---- fixed-delay term --------------------------------------------------
     def fixed_delay(self, dim_idx: int, collective: str) -> float:
@@ -106,6 +138,7 @@ class LatencyModel:
         from them are bit-identical to the method-call path (required by the
         indexed-engine equivalence gate).
         """
+        LatencyModel.stage_table_builds += 1
         rs_wire, ag_wire, npus = [], [], []
         rs_step, ag_step, per_byte, bw = [], [], [], []
         for d in self.topology.dims:
@@ -172,3 +205,26 @@ class LatencyModel:
         p = self.topology.total_npus
         b = (p - 1) / p * size_bytes
         return 2.0 * b if collective == "AR" else b
+
+    def dim_lower_bounds(self, collective: str, size_bytes: float) -> list[float]:
+        """Per-dim busy-time lower bound (seconds) of one collective.
+
+        The wire bytes a schedule places on dimK are minimized when dimK
+        runs at the small end of the size evolution (last RS stage / first
+        AG stage): ``(P_K - 1) * size / total_npus`` bytes, doubled for AR
+        (RS + AG both cross the dim).  No schedule, fusion, arbiter, or
+        preemption can put fewer bytes on the dim, and a dim is a serial
+        BW resource, so the simulated makespan is >= every dim's bound —
+        the pruning certificate used by the topology search.
+        """
+        p = self.topology.total_npus
+        out = []
+        for d in self.topology.dims:
+            if d.npus <= 1:
+                out.append(0.0)
+                continue
+            w = (d.npus - 1) * size_bytes / p
+            if collective == "AR":
+                w *= 2.0
+            out.append(w / d.aggr_bw_bytes)
+        return out

@@ -27,9 +27,10 @@ All policies return the same artifact: a list of ``Chunk``s whose
 """
 from __future__ import annotations
 
+import contextlib
 import itertools
 from dataclasses import dataclass
-from typing import Callable, Sequence
+from typing import Callable, Iterator, Sequence
 
 from repro.core.chunking import Chunk, coalesce_by_order, split_equal
 from repro.core.latency_model import LatencyModel, StageOp
@@ -107,6 +108,49 @@ class ThemisScheduler:
             got = self._delta_cache[key] = self.latency_model.calc_loads_list(
                 chunk_bytes, sched)
         return got
+
+    @contextlib.contextmanager
+    def isolated_run(self) -> Iterator["ThemisScheduler"]:
+        """Scope one scenario's scheduling on a shared scheduler.
+
+        The reuse contract: memo caches (`_stage_deltas`, greedy orders,
+        thresholds, lookahead candidates) are *exact* — they depend only on
+        the latency model — so sharing one scheduler across many scenarios
+        is free and decision-identical.  Tracker state is *not* shareable:
+        it accumulates each scheduled chunk's load.  Inside this context the
+        scheduler runs against a fresh :class:`DimLoadTracker`; on exit the
+        caller's tracker (including an injected cross-tenant shared tracker)
+        is restored untouched, so scenarios never observe each other's
+        loads and the caller's state survives.  Used by
+        ``simulate_requests(scheduler=...)`` and ``core.batch``.
+        """
+        prev = self.tracker
+        self.tracker = DimLoadTracker(self.latency_model)
+        try:
+            yield self
+        finally:
+            self.tracker = prev
+
+    def schedule_stream(
+        self,
+        requests: Sequence[CollectiveRequest],
+        chunks_per_collective: int,
+        *,
+        water_filling: bool = False,
+    ) -> list[list[Chunk]]:
+        """Schedule a request stream in global issue order (ties broken by
+        list position), returning chunk groups indexed like ``requests``.
+        The single definition of the stream-scheduling contract —
+        ``simulate_requests`` and ``repro.core.batch`` both call this, so
+        batch results cannot drift from standalone runs."""
+        order = sorted(range(len(requests)),
+                       key=lambda i: (requests[i].issue_time, i))
+        groups: list[list[Chunk]] = [[] for _ in requests]
+        for i in order:
+            groups[i] = self.schedule_request(
+                requests[i], chunks_per_collective,
+                water_filling=water_filling)
+        return groups
 
     # -- public API -----------------------------------------------------------
     def schedule_collective(
@@ -309,7 +353,7 @@ def schedule_collective(
     water_filling: bool = False,
 ) -> list[Chunk]:
     """Convenience wrapper: build model+scheduler and schedule one collective."""
-    sched = ThemisScheduler(LatencyModel(topology), policy)
+    sched = ThemisScheduler(LatencyModel.for_topology(topology), policy)
     return sched.schedule_collective(
         collective,
         collective_bytes,

@@ -229,6 +229,155 @@ class SimResult:
         return False
 
 
+class TaskArrays:
+    """Struct-of-arrays task storage for the indexed engine.
+
+    Everything here is immutable during a simulation run (the run-varying
+    arrival-seq array is allocated per run), so one ``TaskArrays`` may be
+    shared by many ``simulate()`` calls over the same chunk groups —
+    ``repro.core.batch`` builds these once per scenario family and replays
+    them across seeds/disciplines/arbiters.  ``group_wire`` is copied into
+    each ``SimResult`` so callers can't corrupt the shared arrays.
+    """
+
+    __slots__ = ("n_tasks", "chunk", "stage", "dim", "wire", "fixed",
+                 "group", "prio", "tenant", "last", "first_handles",
+                 "group_wire", "fingerprint", "_validated_groups")
+
+    def __init__(self, n_tasks, chunk, stage, dim, wire, fixed, group,
+                 prio, tenant, last, first_handles, group_wire,
+                 fingerprint=None):
+        self.n_tasks = n_tasks
+        self.chunk = chunk
+        self.stage = stage
+        self.dim = dim
+        self.wire = wire
+        self.fixed = fixed
+        self.group = group
+        self.prio = prio
+        self.tenant = tenant
+        self.last = last
+        self.first_handles = first_handles
+        self.group_wire = group_wire
+        self.fingerprint = fingerprint
+        self._validated_groups = None  # last chunk_groups that passed the
+        #                                simulate() fingerprint check
+
+
+def task_arrays_fingerprint(
+    chunk_groups: list[list[Chunk]],
+    priorities: list[int],
+    tenants: list[str],
+) -> int:
+    """Cheap content hash of everything a :class:`TaskArrays` is built
+    from.  ``simulate(task_arrays=...)`` recomputes it to reject a replay
+    against a *different* chunk-group family — counts alone would accept a
+    same-shaped stream of different sizes/schedules and silently produce
+    wrong results."""
+    return hash((tuple(priorities), tuple(tenants),
+                 tuple((c.index, c.size_bytes, tuple(c.schedule))
+                       for g in chunk_groups for c in g)))
+
+
+def stage_sequence(
+    stage_tables, size_bytes: float, schedule
+) -> tuple[list[int], list[float], list[float]]:
+    """(dims, wire bytes, fixed delays) of one chunk's stages.
+
+    THE scalar stage-transition float sequence — the same expressions as
+    :func:`repro.core.latency_model.stage_transition`, evaluated in
+    schedule order via the flat stage tables.  Both SoA builders (the
+    scalar :func:`build_task_arrays` and the vectorized one in
+    ``repro.core.batch``) call this single definition, which is what keeps
+    them bit-identical; never duplicate this loop.
+    """
+    tbl = stage_tables
+    rs_phase = Phase.RS
+    dims: list[int] = []
+    wires: list[float] = []
+    fixeds: list[float] = []
+    size = size_bytes
+    for phase, dim in schedule:
+        n = tbl.npus[dim]
+        if n <= 1:
+            wire = 0.0
+        elif phase == rs_phase:
+            wire = tbl.rs_wire[dim] * size
+            size = size / n
+        else:
+            wire = tbl.ag_wire[dim] * size
+            size = size * n
+        dims.append(dim)
+        wires.append(wire)
+        fixeds.append(tbl.rs_step[dim] if phase == rs_phase
+                      else tbl.ag_step[dim])
+    return dims, wires, fixeds
+
+
+def build_task_arrays(
+    latency_model: LatencyModel,
+    chunk_groups: list[list[Chunk]],
+    priorities: list[int],
+    tenants: list[str],
+) -> TaskArrays:
+    """Scalar SoA build — the exact float sequence of the indexed engine.
+
+    One flat pass over every chunk stage (:func:`stage_sequence`), so wire
+    bytes and fixed delays are bit-identical to the reference engine's
+    :func:`_build_tasks`.  The vectorized equivalent lives in
+    ``repro.core.batch``.
+    """
+    tbl = latency_model.stage_tables
+    n_groups = len(chunk_groups)
+    n_tasks = sum(len(c.schedule) for g in chunk_groups for c in g)
+    t_chunk = [0] * n_tasks    # global chunk id
+    t_stage = [0] * n_tasks
+    t_dim = [0] * n_tasks
+    t_wire = [0.0] * n_tasks
+    t_fixed = [0.0] * n_tasks
+    t_group = [0] * n_tasks
+    t_prio = [0] * n_tasks
+    t_tenant = [""] * n_tasks
+    t_last = [False] * n_tasks  # final stage of its chunk's chain?
+    first_handles: list[int] = []   # stage-0 handle per chunk, build order
+    group_wire = [0.0] * n_groups
+    h = 0
+    offset = 0  # global chunk-id offset, same scheme as the reference engine
+    for g, group in enumerate(chunk_groups):
+        prio = priorities[g]
+        tenant = tenants[g]
+        gw = 0.0
+        for chunk in group:
+            sched = chunk.schedule
+            cid = chunk.index + offset
+            if sched:
+                first_handles.append(h)
+            dims, wires, fixeds = stage_sequence(tbl, chunk.size_bytes,
+                                                 sched)
+            for s in range(len(sched)):
+                t_chunk[h] = cid
+                t_stage[h] = s
+                t_dim[h] = dims[s]
+                wire = wires[s]
+                t_wire[h] = wire
+                t_fixed[h] = fixeds[s]
+                t_group[h] = g
+                t_prio[h] = prio
+                t_tenant[h] = tenant
+                gw += wire
+                h += 1
+            if sched:
+                t_last[h - 1] = True
+        group_wire[g] = gw
+        if group:
+            offset += max(c.index for c in group) + 1
+    return TaskArrays(n_tasks, t_chunk, t_stage, t_dim, t_wire, t_fixed,
+                      t_group, t_prio, t_tenant, t_last, first_handles,
+                      group_wire,
+                      task_arrays_fingerprint(chunk_groups, priorities,
+                                              tenants))
+
+
 def _build_tasks(
     latency_model: LatencyModel,
     chunks: list[Chunk],
@@ -302,6 +451,7 @@ def simulate(
     arbiter=None,
     preempt_penalty_s: float | None = None,
     engine: str = "indexed",
+    task_arrays: TaskArrays | None = None,
 ) -> SimResult:
     """Simulate one or more collectives (``chunk_groups``).
 
@@ -334,6 +484,11 @@ def simulate(
         differential-testing oracle).  Both produce bit-identical results;
         a custom arbiter the indexed engine cannot bucket-index falls back
         to 'reference' automatically.
+    ``task_arrays``: advanced — a prebuilt :class:`TaskArrays` for exactly
+        these ``chunk_groups``/``priorities``/``tenants`` (see
+        :func:`build_task_arrays`).  ``repro.core.batch`` passes this to
+        replay one SoA build across many scenarios; ignored when the
+        reference engine runs (it rebuilds its own task dict).
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; want {ENGINES}")
@@ -356,13 +511,32 @@ def simulate(
         raise ValueError("tenants/streams must match chunk_groups")
     if arbiter is not None and enforced_order is not None:
         raise ValueError("arbiter and enforced_order are mutually exclusive")
+    if task_arrays is not None:
+        # Replays of the same chunk_groups object (the batch path: one
+        # cached TaskArrays per scenario family, many seeds) skip the
+        # O(stage-ops) rehash via identity; the strong reference keeps the
+        # identity valid.  Per-group tags are covered because scenarios
+        # sharing a cached family share the same request tuple.
+        if task_arrays._validated_groups is not chunk_groups:
+            if (len(task_arrays.group_wire) != n_groups
+                    or task_arrays.fingerprint != task_arrays_fingerprint(
+                        chunk_groups, priorities, tenants)):
+                raise ValueError(
+                    "task_arrays was built for a different chunk-group "
+                    "family (group count or content fingerprint mismatch); "
+                    "rebuild it with build_task_arrays for exactly these "
+                    "chunk_groups/priorities/tenants")
+            task_arrays._validated_groups = chunk_groups
     penalty = _resolve_penalty(preempt_penalty_s, arbiter)
 
     if engine == "indexed" and (arbiter is None or _arbiter_indexable(arbiter)):
-        impl = _simulate_indexed
-    else:
-        impl = _simulate_reference
-    return impl(
+        return _simulate_indexed(
+            topology, chunk_groups, issue_times=issue_times,
+            priorities=priorities, intra=intra, fusion=fusion,
+            fusion_limit=fusion_limit, enforced_order=enforced_order,
+            jitter=jitter, seed=seed, tenants=tenants, streams=streams,
+            arbiter=arbiter, penalty=penalty, task_arrays=task_arrays)
+    return _simulate_reference(
         topology, chunk_groups, issue_times=issue_times,
         priorities=priorities, intra=intra, fusion=fusion,
         fusion_limit=fusion_limit, enforced_order=enforced_order,
@@ -393,7 +567,7 @@ def _simulate_reference(
     import random
 
     rng = random.Random(seed)
-    lm = LatencyModel(topology)
+    lm = LatencyModel.for_topology(topology)
     num_dims = topology.num_dims
     n_groups = len(chunk_groups)
 
@@ -660,6 +834,7 @@ def _simulate_indexed(
     streams: list[str],
     arbiter,
     penalty: float,
+    task_arrays: TaskArrays | None = None,
 ) -> SimResult:
     """Same semantics as :func:`_simulate_reference`, near-linear cost.
 
@@ -680,64 +855,29 @@ def _simulate_indexed(
     import random
 
     rng = random.Random(seed)
-    lm = LatencyModel(topology)
+    lm = LatencyModel.for_topology(topology)
     tbl = lm.stage_tables
     num_dims = topology.num_dims
-    n_groups = len(chunk_groups)
-    rs_phase = Phase.RS
 
     # ---- struct-of-arrays task storage (integer handles) -------------------
-    n_tasks = sum(len(c.schedule) for g in chunk_groups for c in g)
-    t_chunk = [0] * n_tasks    # global chunk id
-    t_stage = [0] * n_tasks
-    t_dim = [0] * n_tasks
-    t_wire = [0.0] * n_tasks
-    t_fixed = [0.0] * n_tasks
-    t_group = [0] * n_tasks
-    t_prio = [0] * n_tasks
-    t_tenant = [""] * n_tasks
-    t_arr = [0] * n_tasks      # arrival seq (assigned when readied)
-    t_last = [False] * n_tasks  # final stage of its chunk's chain?
-    first_handles: list[int] = []   # stage-0 handle per chunk, build order
-    group_wire = [0.0] * n_groups
-    h = 0
-    offset = 0  # global chunk-id offset, same scheme as the reference engine
-    for g, group in enumerate(chunk_groups):
-        prio = priorities[g]
-        tenant = tenants[g]
-        gw = 0.0
-        for chunk in group:
-            size = chunk.size_bytes
-            sched = chunk.schedule
-            cid = chunk.index + offset
-            if sched:
-                first_handles.append(h)
-            for s, (phase, dim) in enumerate(sched):
-                n = tbl.npus[dim]
-                if n <= 1:
-                    wire = 0.0
-                elif phase == rs_phase:
-                    wire = tbl.rs_wire[dim] * size
-                    size = size / n
-                else:
-                    wire = tbl.ag_wire[dim] * size
-                    size = size * n
-                t_chunk[h] = cid
-                t_stage[h] = s
-                t_dim[h] = dim
-                t_wire[h] = wire
-                t_fixed[h] = (tbl.rs_step[dim] if phase == rs_phase
-                              else tbl.ag_step[dim])
-                t_group[h] = g
-                t_prio[h] = prio
-                t_tenant[h] = tenant
-                gw += wire
-                h += 1
-            if sched:
-                t_last[h - 1] = True
-        group_wire[g] = gw
-        if group:
-            offset += max(c.index for c in group) + 1
+    ta = task_arrays
+    if ta is None:
+        ta = build_task_arrays(lm, chunk_groups, priorities, tenants)
+    n_tasks = ta.n_tasks
+    t_chunk = ta.chunk
+    t_stage = ta.stage
+    t_dim = ta.dim
+    t_wire = ta.wire
+    t_fixed = ta.fixed
+    t_group = ta.group
+    t_prio = ta.prio
+    t_tenant = ta.tenant
+    t_last = ta.last
+    first_handles = ta.first_handles
+    # group_wire is returned inside SimResult — copy so a shared TaskArrays
+    # (replayed across a batch of scenarios) can't be mutated via a result.
+    group_wire = list(ta.group_wire)
+    t_arr = [0] * n_tasks      # arrival seq (assigned when readied; per run)
 
     # ---- per-dim state ------------------------------------------------------
     busy_until = [0.0] * num_dims
@@ -1061,6 +1201,7 @@ def simulate_requests(
     arbiter=None,
     preempt_penalty_s: float | None = None,
     engine: str = "indexed",
+    scheduler=None,
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Online entry point: schedule and simulate an arrival-time-aware
     request stream.
@@ -1074,16 +1215,34 @@ def simulate_requests(
     *shared-tracker* mode (one fabric-wide load view); see
     ``repro.tenancy.simulate_fabric`` for per-tenant trackers and
     inter-tenant arbitration.
+
+    ``scheduler`` — the scenario-reuse contract: pass a shared
+    ``ThemisScheduler`` to keep its memo caches (exact; see
+    ``ThemisScheduler.isolated_run``) warm across many calls.  Each call
+    still schedules against a *fresh* load tracker and restores the
+    caller's tracker on return, so back-to-back calls with one shared
+    scheduler are bit-identical to calls with fresh schedulers and never
+    leak tracker state between scenarios.  The scheduler must have been
+    built for ``topology`` (scheduling with another topology's latency
+    model was previously silently wrong; now it raises), and its policy
+    overrides the ``policy`` argument.
     """
     from repro.core.scheduler import ThemisScheduler
 
-    lm = LatencyModel(topology)
-    sched = ThemisScheduler(lm, policy)
-    order = sorted(range(len(requests)), key=lambda i: (requests[i].issue_time, i))
-    groups: list[list[Chunk]] = [[] for _ in requests]
-    for i in order:
-        groups[i] = sched.schedule_request(
-            requests[i], chunks_per_collective, water_filling=water_filling)
+    if scheduler is None:
+        lm = LatencyModel.for_topology(topology)
+        sched_ctx = ThemisScheduler(lm, policy).isolated_run()
+    else:
+        if scheduler.latency_model.topology != topology:
+            raise ValueError(
+                "scheduler was built for topology "
+                f"{scheduler.latency_model.topology.name!r}; reusing its "
+                f"memos on {topology.name!r} is unspecified — build one "
+                "scheduler per topology")
+        sched_ctx = scheduler.isolated_run()
+    with sched_ctx as sched:
+        groups = sched.schedule_stream(
+            requests, chunks_per_collective, water_filling=water_filling)
     res = simulate(
         topology,
         groups,

@@ -39,7 +39,7 @@ def schedule_tenant_requests(
     request sees every tenant's in-flight residual load.  Without it, each
     tenant's tracker only ever sees that tenant's own requests.
     """
-    lm = LatencyModel(topology)
+    lm = LatencyModel.for_topology(topology)
     shared = DimLoadTracker(lm) if shared_tracker else None
     schedulers: dict[str, ThemisScheduler] = {}
     groups: list[list[Chunk]] = [[] for _ in requests]

@@ -11,10 +11,17 @@ import time
 
 import pytest
 
+from repro.core.batch import (
+    BatchCaches,
+    Scenario,
+    build_task_arrays_vectorized,
+    simulate_batch,
+    simulate_scenario,
+)
 from repro.core.latency_model import LatencyModel
 from repro.core.requests import CollectiveRequest
-from repro.core.scheduler import POLICIES, schedule_collective
-from repro.core.simulator import simulate, simulate_requests
+from repro.core.scheduler import POLICIES, ThemisScheduler, schedule_collective
+from repro.core.simulator import build_task_arrays, simulate, simulate_requests
 from repro.tenancy import (
     FabricArbiter,
     TenantSpec,
@@ -235,6 +242,126 @@ def test_unknown_engine_rejected():
 
 
 # ---------------------------------------------------------------------------
+# Batch/fleet layer: simulate_batch must match standalone engine="indexed"
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICIES)
+def test_simulate_batch_matches_standalone_across_policies(policy):
+    rng = random.Random(300 + POLICIES.index(policy))
+    scenarios = []
+    for tname in ("2D-SW_SW", "3D-SW_SW_SW_hetero"):
+        reqs = tuple(_rand_requests(rng, 9))
+        for intra in ("SCF", "FIFO"):
+            for jitter, seed in ((0.0, 0), (0.12, rng.randrange(100))):
+                scenarios.append(Scenario(
+                    TOPOS[tname], reqs, policy=policy,
+                    chunks_per_collective=6, intra=intra,
+                    jitter=jitter, seed=seed))
+    for rb, sc in zip(simulate_batch(scenarios), scenarios):
+        assert_same(rb, simulate_scenario(sc))
+
+
+@pytest.mark.parametrize("arb_policy", ARB_POLICIES)
+def test_simulate_batch_matches_standalone_under_arbiters(arb_policy):
+    rng = random.Random(400 + ARB_POLICIES.index(arb_policy))
+    specs = [TenantSpec("a", weight=2.0),
+             TenantSpec("b", weight=1.0, priority=1, slo_slowdown=1.5)]
+    scenarios = []
+    for tname in ("2D-SW_SW", "3D-SW_SW_SW_hetero"):
+        reqs = tuple(_rand_requests(rng, 12, tenants=("a", "b")))
+        factory = (lambda p=arb_policy: FabricArbiter(
+            p, specs, quantum_chunks=4, isolated_latency={"b": 0.001}))
+        for jitter, seed in ((0.0, 0), (0.1, 7)):
+            scenarios.append(Scenario(
+                TOPOS[tname], reqs, chunks_per_collective=8,
+                jitter=jitter, seed=seed, arbiter_factory=factory))
+    for rb, sc in zip(simulate_batch(scenarios), scenarios):
+        assert_same(rb, simulate_scenario(sc))
+
+
+def test_simulate_batch_water_filling_and_cache_reuse():
+    """Shared BatchCaches across successive batches (the topology-search
+    usage) must not change results; water-filling exercises multi-class
+    chunk groups in the vectorized builder."""
+    rng = random.Random(17)
+    reqs = tuple(_rand_requests(rng, 8))
+    scenarios = [
+        Scenario(TOPOS["3D-SW_SW_SW_homo"], reqs, chunks_per_collective=8,
+                 water_filling=True, jitter=0.05, seed=s)
+        for s in range(4)
+    ]
+    caches = BatchCaches()
+    first = simulate_batch(scenarios, caches=caches)
+    again = simulate_batch(scenarios, caches=caches)  # fully warm replay
+    for ra, rb, sc in zip(first, again, scenarios):
+        assert_same(ra, rb)
+        assert_same(ra, simulate_scenario(sc))
+
+
+def test_vectorized_task_build_matches_scalar():
+    rng = random.Random(23)
+    for tname in ("2D-SW_SW", "4D-Ring_FC_Ring_SW"):
+        topo = TOPOS[tname]
+        reqs = _rand_requests(rng, 7, tenants=("a", "b"))
+        for wf in (False, True):
+            _, groups = simulate_requests(topo, reqs,
+                                          chunks_per_collective=5,
+                                          water_filling=wf)
+            lm = LatencyModel.for_topology(topo)
+            pri = [r.priority for r in reqs]
+            ten = [r.tenant for r in reqs]
+            a = build_task_arrays(lm, groups, pri, ten)
+            b = build_task_arrays_vectorized(lm, groups, pri, ten)
+            for f in ("n_tasks", "chunk", "stage", "dim", "wire", "fixed",
+                      "group", "prio", "tenant", "last", "first_handles",
+                      "group_wire"):
+                assert getattr(a, f) == getattr(b, f), (tname, wf, f)
+
+
+def test_vectorized_build_handles_empty_groups():
+    topo = TOPOS["2D-SW_SW"]
+    lm = LatencyModel.for_topology(topo)
+    chunks = schedule_collective(topo, "AR", 8 * MB, 3, "themis")
+    groups = [[], chunks, []]
+    a = build_task_arrays(lm, groups, [0, 0, 0], ["x", "y", "z"])
+    b = build_task_arrays_vectorized(lm, groups, [0, 0, 0], ["x", "y", "z"])
+    assert a.group_wire == b.group_wire and a.chunk == b.chunk
+    assert a.group == b.group == [1] * a.n_tasks
+
+
+# ---------------------------------------------------------------------------
+# Scheduler reuse contract (simulate_requests(scheduler=...))
+# ---------------------------------------------------------------------------
+def test_shared_scheduler_is_bit_identical_and_does_not_leak_state():
+    topo = TOPOS["3D-SW_SW_SW_hetero"]
+    rng = random.Random(5)
+    streams = [_rand_requests(rng, 8) for _ in range(3)]
+    fresh = [simulate_requests(topo, reqs, chunks_per_collective=6)
+             for reqs in streams]
+    shared = ThemisScheduler(LatencyModel.for_topology(topo), "themis")
+    # Pre-load the caller's tracker: the calls below must not disturb it.
+    shared.tracker.begin_collective("AR")
+    caller_loads = shared.tracker.get_loads()
+    reused = [simulate_requests(topo, reqs, chunks_per_collective=6,
+                                scheduler=shared)
+              for reqs in streams]
+    for (rf, gf), (rr, gr) in zip(fresh, reused):
+        assert_same(rf, rr)
+        assert [[c.schedule for c in g] for g in gf] == [
+            [c.schedule for c in g] for g in gr]
+    assert shared.tracker.get_loads() == caller_loads
+    # memo caches actually persisted across the calls (the point of reuse)
+    assert shared._delta_cache
+
+
+def test_shared_scheduler_rejects_foreign_topology():
+    sched = ThemisScheduler(
+        LatencyModel.for_topology(TOPOS["2D-SW_SW"]), "themis")
+    with pytest.raises(ValueError, match="built for topology"):
+        simulate_requests(TOPOS["3D-SW_SW_SW_homo"],
+                          [CollectiveRequest("AR", MB)], scheduler=sched)
+
+
+# ---------------------------------------------------------------------------
 # Scaling smoke: 4x stage-ops must cost <= ~6x wall time
 # ---------------------------------------------------------------------------
 def test_indexed_engine_scales_near_linearly():
@@ -251,8 +378,13 @@ def test_indexed_engine_scales_near_linearly():
             best = min(best, time.perf_counter() - t0)
         return best
 
-    t_small = run_stream(64, 16)
-    t_big = run_stream(128, 32)  # 4x the stage-ops
+    # Wall-clock gates flake on loaded shared runners; re-measure once
+    # before failing so only a *persistent* superlinear blowup trips it.
+    for attempt in range(2):
+        t_small = run_stream(64, 16)
+        t_big = run_stream(128, 32)  # 4x the stage-ops
+        if t_big / t_small <= 6.0:
+            break
     assert t_big / t_small <= 6.0, (
         f"4x stage-ops cost {t_big / t_small:.1f}x wall time "
         f"({t_small * 1e3:.1f}ms -> {t_big * 1e3:.1f}ms)")
