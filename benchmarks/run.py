@@ -27,6 +27,7 @@ def main() -> None:
         sched_perf,
         tenancy_study,
         topo_search,
+        traffic_study,
     )
     from benchmarks.common import print_rows
 
@@ -40,6 +41,7 @@ def main() -> None:
         ("tenancy", tenancy_study),
         ("sched_perf", sched_perf),
         ("topo_search", topo_search),
+        ("traffic", traffic_study),
         ("insights", insights_study),
         ("beyond", beyond_paper),
         ("roofline", roofline_table),

@@ -1,0 +1,336 @@
+"""Traffic study: dependency-gated streams on the shared fabric.
+
+Four parts, all emitted into ``BENCH_traffic.json``:
+
+  * **equivalence gate** — dependency-gated scenarios (pipeline 1F1B,
+    serving chains, mixed tenants, DCN stragglers) simulated by both
+    engines and through ``simulate_batch``; every ``SimResult`` field must
+    be bit-identical, and a fixed-time stream routed through the traffic IR
+    must reproduce the plain ``simulate_requests`` result byte-for-byte.
+  * **mixed tenancy** — a training tenant (closed-loop multi-iteration
+    ResNet-152 buckets) and a serving tenant (prefill burst + decode
+    chains, costs derived from the llama3-8b config) share a TPU-pod
+    fabric under >= 2 arbiter policies via ``simulate_batch``; reports
+    decode p50/p95/p99, prefill p99, and the training slowdown vs running
+    alone.
+  * **DCN jitter** — the same mixed scenario with a lognormal straggler
+    distribution on the pod dimension (``make_tpu_pod_topology``'s
+    ``dcn_straggler_sigma``), multi-seed: decode tail vs sigma.
+  * **long-stream scaling** — the standing fleet benchmark: one scenario
+    family (multi-iteration training + a decode tenant) grown to ~1M
+    stage-ops; a log-log fit of indexed-engine wall time vs stage-ops must
+    stay <= 1.2 (quick mode backstops at 1.6 — its small points are too
+    noisy on shared runners, matching ``sched_perf``'s convention).
+
+Run standalone (``python -m benchmarks.traffic_study [--quick]``) or via
+``python -m benchmarks.run traffic``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+from benchmarks.common import row, timed_best
+from repro.core.batch import BatchCaches, Scenario, simulate_batch
+from repro.core.requests import CollectiveRequest
+from repro.core.simulator import simulate, simulate_requests
+from repro.core.workloads import make_resnet152
+from repro.tenancy import FabricArbiter, TenantJob, TenantSpec, tenant_traffic
+from repro.topology import make_tpu_pod_topology
+from repro.traffic import (
+    from_requests,
+    pipeline_traffic,
+    serving_costs_from_arch,
+    serving_traffic,
+    simulate_traffic,
+)
+
+MB = 1e6
+OUT_JSON = Path(__file__).resolve().parents[1] / "BENCH_traffic.json"
+
+
+def _assert_equal(res_a, res_b, label: str) -> None:
+    bad = res_a.diff_fields(res_b)
+    if bad:
+        raise AssertionError(
+            f"traffic equivalence violated on {label}: fields {bad} differ")
+
+
+def _stage_ops(groups) -> int:
+    return sum(len(c.schedule) for grp in groups for c in grp)
+
+
+def _serving_job(costs, *, gen_tokens: int, n_requests: int,
+                 arrival_gap_s: float) -> TenantJob:
+    return TenantJob(
+        TenantSpec("serve", weight=2.0, slo_slowdown=1.5),
+        traffic_builder=lambda job: serving_traffic(
+            gen_tokens=gen_tokens, n_requests=n_requests,
+            arrival_gap_s=arrival_gap_s, **costs))
+
+
+def _mixed_graph(costs, *, iterations: int, gen_tokens: int,
+                 n_requests: int, arrival_gap_s: float = 2e-3,
+                 n_buckets: int = 16):
+    train = TenantJob(
+        TenantSpec("train", weight=1.0, iterations=iterations,
+                   n_buckets=n_buckets),
+        make_resnet152())
+    serve = _serving_job(costs, gen_tokens=gen_tokens,
+                         n_requests=n_requests, arrival_gap_s=arrival_gap_s)
+    return tenant_traffic([train, serve]), [train.spec, serve.spec]
+
+
+# ---------------------------------------------------------------------------
+# Equivalence gate
+# ---------------------------------------------------------------------------
+def equivalence_gate(costs, quick: bool) -> list[str]:
+    checked: list[str] = []
+    topo = make_tpu_pod_topology(2, 8, 8)
+
+    # fixed-time stream through the IR == plain simulate_requests, exactly
+    reqs = [CollectiveRequest(["AR", "RS", "AG"][i % 3],
+                              (4 + 7 * (i % 5)) * MB, issue_time=i * 1.1e-4,
+                              priority=i % 2, stream=f"s{i % 2}")
+            for i in range(14)]
+    r_plain, _ = simulate_requests(topo, reqs, chunks_per_collective=8)
+    r_graph, _ = simulate_traffic(topo, from_requests(reqs),
+                                  chunks_per_collective=8)
+    _assert_equal(r_graph, r_plain, "fixed-time-ir-vs-simulate_requests")
+    checked.append("fixed-time-ir-vs-simulate_requests")
+
+    graphs = {
+        "pipeline-1f1b": pipeline_traffic(
+            stages=4, microbatches=6, fwd_s=1e-3, bwd_s=2e-3,
+            act_bytes=8 * MB, grad_ar_bytes=60 * MB, n_grad_buckets=4),
+        "serving-chains": serving_traffic(
+            gen_tokens=12, n_requests=3, arrival_gap_s=1.5e-3, **costs),
+    }
+    mixed, specs = _mixed_graph(costs, iterations=2, gen_tokens=8,
+                                n_requests=2)
+    jit_topo = make_tpu_pod_topology(2, 8, 8, dcn_straggler_sigma=0.4)
+    cases = [("plain", topo, None, 0.0, 0),
+             ("arbiter:weighted-fair", topo,
+              lambda: FabricArbiter("weighted-fair", specs), 0.0, 0),
+             ("dcn-straggler", jit_topo, None, 0.05, 3)]
+    graphs["mixed-tenant"] = mixed
+    for gname, graph in graphs.items():
+        for cname, t, factory, jitter, seed in cases:
+            kw = dict(chunks_per_collective=6, jitter=jitter, seed=seed)
+            ri, _ = simulate_traffic(t, graph, engine="indexed",
+                                     arbiter=factory() if factory else None,
+                                     **kw)
+            rr, _ = simulate_traffic(t, graph, engine="reference",
+                                     arbiter=factory() if factory else None,
+                                     **kw)
+            label = f"{gname}/{cname}"
+            _assert_equal(ri, rr, label)
+            # batch layer must replay the identical result
+            sc = Scenario(t, traffic=graph, chunks_per_collective=6,
+                          jitter=jitter, seed=seed, arbiter_factory=factory)
+            rb = simulate_batch([sc])[0]
+            _assert_equal(rb, ri, label + "/batch")
+            checked.append(label)
+            if quick:
+                break
+    return checked
+
+
+# ---------------------------------------------------------------------------
+# Mixed training + serving tenancy under arbiter policies
+# ---------------------------------------------------------------------------
+def mixed_tenancy(costs, quick: bool) -> dict:
+    topo = make_tpu_pod_topology(2, 8, 8)
+    iterations = 2 if quick else 3
+    gen_tokens = 16 if quick else 32
+    graph, specs = _mixed_graph(costs, iterations=iterations,
+                                gen_tokens=gen_tokens, n_requests=3)
+
+    # Isolated references: each tenant alone on the full fabric.
+    train_alone = TenantJob(TenantSpec("train", iterations=iterations,
+                                      n_buckets=16), make_resnet152())
+    res_train, _ = simulate_traffic(topo, train_alone.traffic(),
+                                    chunks_per_collective=16)
+    train_iso = res_train.finish_time()
+    serve_alone = _serving_job(costs, gen_tokens=gen_tokens, n_requests=3,
+                               arrival_gap_s=2e-3)
+    res_serve, _ = simulate_traffic(topo, serve_alone.traffic(),
+                                    chunks_per_collective=16)
+    decode_iso = res_serve.stream_stats()["serve/decode"]
+    iso_lat = {"serve": decode_iso.latency_mean,
+               "train": train_iso / max(1, iterations)}
+
+    policies = ("fifo", "weighted-fair") if quick else (
+        "fifo", "weighted-fair", "slo-aware")
+    scenarios = [
+        Scenario(topo, traffic=graph, chunks_per_collective=16,
+                 arbiter_factory=(lambda p=pol: FabricArbiter(
+                     p, specs, isolated_latency=iso_lat)),
+                 label=pol)
+        for pol in policies
+    ]
+    caches = BatchCaches()
+    results = simulate_batch(scenarios, caches=caches)
+    out: dict = {
+        "topology": topo.name,
+        "iterations": iterations,
+        "gen_tokens": gen_tokens,
+        "train_isolated_finish_s": train_iso,
+        "decode_isolated_p99_s": decode_iso.latency_p99,
+        "policies": {},
+    }
+    for sc, res in zip(scenarios, results):
+        dec = res.stream_stats()["serve/decode"]
+        pre = res.stream_stats()["serve/prefill"]
+        train_fin = res.stream_stats(by="tenant")["train"].finish
+        out["policies"][sc.label] = {
+            "decode_p50_s": dec.latency_p50,
+            "decode_p95_s": dec.latency_p95,
+            "decode_p99_s": dec.latency_p99,
+            "prefill_p99_s": pre.latency_p99,
+            "train_finish_s": train_fin,
+            "train_slowdown": train_fin / train_iso,
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# DCN straggler sweep
+# ---------------------------------------------------------------------------
+def dcn_jitter(costs, quick: bool) -> dict:
+    sigmas = (0.0, 0.5) if quick else (0.0, 0.25, 0.5)
+    seeds = range(2) if quick else range(4)
+    iterations = 2
+    gen_tokens = 12 if quick else 24
+    out: dict = {"sigmas": {}}
+    caches = BatchCaches()
+    for sigma in sigmas:
+        topo = make_tpu_pod_topology(2, 8, 8, dcn_straggler_sigma=sigma)
+        graph, specs = _mixed_graph(costs, iterations=iterations,
+                                    gen_tokens=gen_tokens, n_requests=2)
+        scenarios = [
+            Scenario(topo, traffic=graph, chunks_per_collective=8,
+                     seed=seed,
+                     arbiter_factory=(lambda: FabricArbiter(
+                         "weighted-fair", specs)))
+            for seed in seeds
+        ]
+        results = simulate_batch(scenarios, caches=caches)
+        p99s = [r.stream_stats()["serve/decode"].latency_p99
+                for r in results]
+        fins = [r.finish_time() for r in results]
+        out["sigmas"][str(sigma)] = {
+            "decode_p99_mean_s": sum(p99s) / len(p99s),
+            "decode_p99_max_s": max(p99s),
+            "finish_mean_s": sum(fins) / len(fins),
+            "seeds": len(list(seeds)),
+        }
+    base = out["sigmas"]["0.0"]["decode_p99_mean_s"]
+    worst = out["sigmas"][str(sigmas[-1])]["decode_p99_mean_s"]
+    out["tail_inflation"] = worst / base if base else 0.0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Long-stream scaling (standing fleet benchmark)
+# ---------------------------------------------------------------------------
+def _fit_exponent(points: list[tuple[int, float]]) -> float:
+    xs = [math.log(p[0]) for p in points]
+    ys = [math.log(p[1]) for p in points]
+    n = len(xs)
+    mx, my = sum(xs) / n, sum(ys) / n
+    num = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+    den = sum((x - mx) ** 2 for x in xs)
+    return num / den
+
+
+def long_stream(costs, quick: bool) -> dict:
+    """Multi-iteration training + decode tenant grown to ~1M stage-ops.
+
+    The scheduling pass and vectorized task build run once per size through
+    ``BatchCaches``; the timed quantity is the dependency-gated indexed
+    event loop (the thing whose scaling the gate protects).
+    """
+    sizes = ((2, 60), (4, 120), (8, 240)) if quick else (
+        (10, 150), (30, 450), (80, 1200), (160, 2400))
+    topo = make_tpu_pod_topology(2, 8, 8)
+    caches = BatchCaches()
+    pts = []
+    detail = []
+    for iterations, gen_tokens in sizes:
+        graph, _ = _mixed_graph(costs, iterations=iterations,
+                                gen_tokens=gen_tokens, n_requests=2,
+                                arrival_gap_s=1e-3)
+        sc = Scenario(topo, traffic=graph, chunks_per_collective=32)
+        groups, ta = caches.groups_and_arrays(sc)
+        kw = graph.sim_kwargs()
+        repeat = 3 if ta.n_tasks <= 60_000 else 1
+        res, secs = timed_best(
+            simulate, topo, groups, task_arrays=ta, engine="indexed",
+            repeat=repeat, **kw)
+        assert ta.n_tasks == _stage_ops(groups)
+        pts.append((ta.n_tasks, secs))
+        detail.append({"iterations": iterations, "gen_tokens": gen_tokens,
+                       "stage_ops": ta.n_tasks, "indexed_s": secs,
+                       "makespan_s": res.makespan})
+    exp = _fit_exponent(pts)
+    limit = 1.6 if quick else 1.2
+    ok = exp <= limit
+    if not ok:
+        raise AssertionError(
+            f"long-stream scaling exponent {exp:.3f} > {limit}")
+    return {"points": detail, "exponent": exp, "limit": limit, "ok": ok,
+            "largest_stage_ops": pts[-1][0]}
+
+
+def run(quick: bool = False):
+    costs = serving_costs_from_arch("llama3-8b", batch=4, prompt_len=512,
+                                    tp=8)
+    report: dict = {"mode": "quick" if quick else "full",
+                    "serving_costs": costs}
+    rows = []
+
+    checked = equivalence_gate(costs, quick)
+    report["equivalence"] = {"scenarios": checked, "ok": True}
+    rows.append(row("traffic/equivalence", 0.0,
+                    f"{len(checked)} dependency-gated scenarios "
+                    "bit-identical"))
+
+    mt = mixed_tenancy(costs, quick)
+    report["mixed_tenant"] = mt
+    for pol, stats in mt["policies"].items():
+        rows.append(row(
+            f"traffic/mixed/{pol}", stats["decode_p99_s"] * 1e6,
+            f"decode_p99={stats['decode_p99_s'] * 1e3:.3f}ms "
+            f"train_slowdown={stats['train_slowdown']:.3f}"))
+
+    dj = dcn_jitter(costs, quick)
+    report["dcn_jitter"] = dj
+    rows.append(row(
+        "traffic/dcn_jitter", 0.0,
+        f"decode_p99 tail inflation {dj['tail_inflation']:.2f}x at "
+        f"sigma={list(dj['sigmas'])[-1]}"))
+
+    ls = long_stream(costs, quick)
+    report["long_stream"] = ls
+    rows.append(row(
+        "traffic/long_stream", ls["points"][-1]["indexed_s"] * 1e6,
+        f"exponent={ls['exponent']:.3f} "
+        f"largest={ls['largest_stage_ops']} stage-ops"))
+
+    OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
+    rows.append(row("traffic/json", 0.0, f"json={OUT_JSON.name}"))
+    return rows
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv[1:]
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=quick):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

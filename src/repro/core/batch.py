@@ -31,6 +31,13 @@ engine, so every result is bit-identical to a standalone
 ``simulate_requests(..., engine="indexed")`` call — the equivalence suite
 (``tests/test_engine_equiv.py``) and ``benchmarks/topo_search.py`` assert
 this field-for-field.
+
+Dependency-gated streams (``Scenario.traffic``, a
+``repro.traffic.TrafficGraph``) ride the same machinery: the scheduling
+pass and the vectorized task build are shared per graph family exactly
+like request streams, and dependency resolution stays in the per-scenario
+event loop — so pipeline and serving scenarios batch as cheaply as
+training ones.
 """
 from __future__ import annotations
 
@@ -61,10 +68,17 @@ class Scenario:
     field here is shared batch machinery.  ``arbiter_factory`` (not an
     instance) because arbiters are stateful and each scenario must get a
     fresh one; ``label`` is free-form for reporting.
+
+    ``traffic`` (a :class:`repro.traffic.TrafficGraph`, mutually exclusive
+    with ``requests``) runs a *dependency-gated* stream instead of a
+    fixed-time one: the scheduling pass walks the graph's estimated-issue
+    order and the vectorized task build is reused unchanged, while
+    dependency resolution stays in the per-scenario event loop
+    (``simulate(deps=...)``).
     """
 
     topology: Topology
-    requests: tuple[CollectiveRequest, ...]
+    requests: tuple[CollectiveRequest, ...] = ()
     policy: str = "themis"
     chunks_per_collective: int = 64
     water_filling: bool = False
@@ -76,13 +90,19 @@ class Scenario:
     arbiter_factory: Callable[[], Any] | None = None
     preempt_penalty_s: float | None = None
     label: str = ""
+    traffic: Any | None = None   # repro.traffic.TrafficGraph
 
     def __post_init__(self):
         object.__setattr__(self, "requests", tuple(self.requests))
+        if self.traffic is not None and self.requests:
+            raise ValueError(
+                "pass either requests or traffic, not both")
+        if self.traffic is None and not self.requests:
+            raise ValueError("scenario needs requests or traffic")
 
     def schedule_key(self) -> tuple:
         """Everything the chunk schedules are a function of."""
-        return (self.topology, self.policy, self.requests,
+        return (self.topology, self.policy, self.requests, self.traffic,
                 self.chunks_per_collective, self.water_filling)
 
 
@@ -93,6 +113,14 @@ def simulate_scenario(scenario: Scenario) -> SimResult:
     ``simulate()`` calls does, and the baseline the fleet benchmark times
     ``simulate_batch`` against."""
     sc = scenario
+    if sc.traffic is not None:
+        from repro.traffic.engine import schedule_traffic
+
+        groups = schedule_traffic(
+            sc.topology, sc.traffic, policy=sc.policy,
+            chunks_per_collective=sc.chunks_per_collective,
+            water_filling=sc.water_filling)
+        return _run_scenario(sc, groups, None)
     sched = ThemisScheduler(LatencyModel.for_topology(sc.topology), sc.policy)
     groups = sched.schedule_stream(
         sc.requests, sc.chunks_per_collective,
@@ -133,13 +161,23 @@ class BatchCaches:
         got = self._groups.get(key)
         if got is None:
             sched = self._scheduler(sc.topology, sc.policy)
-            with sched.isolated_run():
-                groups = sched.schedule_stream(
-                    sc.requests, sc.chunks_per_collective,
-                    water_filling=sc.water_filling)
-            ta = self._build_arrays(sc.topology, groups,
-                                    [r.priority for r in sc.requests],
-                                    [r.tenant for r in sc.requests])
+            if sc.traffic is not None:
+                from repro.traffic.engine import schedule_traffic
+
+                groups = schedule_traffic(
+                    sc.topology, sc.traffic, policy=sc.policy,
+                    chunks_per_collective=sc.chunks_per_collective,
+                    water_filling=sc.water_filling, scheduler=sched)
+                pri = [n.priority for n in sc.traffic.nodes]
+                ten = [n.tenant_tag for n in sc.traffic.nodes]
+            else:
+                with sched.isolated_run():
+                    groups = sched.schedule_stream(
+                        sc.requests, sc.chunks_per_collective,
+                        water_filling=sc.water_filling)
+                pri = [r.priority for r in sc.requests]
+                ten = [r.tenant for r in sc.requests]
+            ta = self._build_arrays(sc.topology, groups, pri, ten)
             if len(self._groups) >= self._GROUP_CAP:
                 self._groups.pop(next(iter(self._groups)))
             got = self._groups[key] = (groups, ta)
@@ -309,16 +347,20 @@ def build_task_arrays_vectorized(
 def _run_scenario(sc: Scenario, groups: list[list[Chunk]],
                   ta: TaskArrays) -> SimResult:
     arb = sc.arbiter_factory() if sc.arbiter_factory is not None else None
+    if sc.traffic is not None:
+        kw = sc.traffic.sim_kwargs()
+    else:
+        kw = dict(
+            issue_times=[r.issue_time for r in sc.requests],
+            priorities=[r.priority for r in sc.requests],
+            tenants=[r.tenant for r in sc.requests],
+            streams=[r.stream for r in sc.requests])
     return simulate(
         sc.topology, groups,
-        issue_times=[r.issue_time for r in sc.requests],
-        priorities=[r.priority for r in sc.requests],
         intra=sc.intra, fusion=sc.fusion, fusion_limit=sc.fusion_limit,
         jitter=sc.jitter, seed=sc.seed,
-        tenants=[r.tenant for r in sc.requests],
-        streams=[r.stream for r in sc.requests],
         arbiter=arb, preempt_penalty_s=sc.preempt_penalty_s,
-        engine="indexed", task_arrays=ta)
+        engine="indexed", task_arrays=ta, **kw)
 
 
 def simulate_batch(

@@ -26,6 +26,17 @@ is the high-level entry: a stream of :class:`CollectiveRequest`s is
 scheduled incrementally (``ThemisScheduler.schedule_request``, which keeps
 the Dim Load Tracker running across requests) and simulated jointly.
 
+Beyond fixed issue times, groups may be *dependency-gated* (``deps`` /
+``dep_delay_s``): a group becomes eligible only once all its predecessor
+groups have fully finished plus a compute delay — the structure pipeline
+1F1B activation streams and serving decode chains need, where a send's
+issue time is itself an output of the simulation (Rashidi et al.'s ACE,
+arXiv 2007.00156: compute->comm dependencies determine overlap).  Groups
+with an empty chunk list act as pure compute nodes: they finish at their
+eligibility instant and only exist to gate (and delay) their dependents.
+``repro.traffic`` builds these graphs; ``SimResult.group_issue`` reports
+the *resolved* issue times.
+
 Multi-tenant fabrics plug in through an *arbiter* (duck-typed; see
 ``repro.tenancy.FabricArbiter``): when present it replaces the per-dim
 queue discipline (inter-tenant policies such as weighted-fair or
@@ -117,6 +128,17 @@ class _Service:
     svc_idx: int               # index of this service in dim_services[dim]
 
 
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    """Linear-interpolation percentile of pre-sorted data (numpy's default
+    method, without requiring numpy)."""
+    if not sorted_vals:
+        return 0.0
+    k = (len(sorted_vals) - 1) * q
+    lo = int(k)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    return sorted_vals[lo] + (sorted_vals[hi] - sorted_vals[lo]) * (k - lo)
+
+
 @dataclass(frozen=True)
 class StreamStats:
     """Aggregate metrics of one request stream (or tenant)."""
@@ -127,6 +149,11 @@ class StreamStats:
     latency_mean: float        # mean issue-to-finish latency
     latency_max: float
     wire_bytes: float          # total wire bytes moved for the tag
+    # Latency percentiles — serving SLOs are tail metrics (decode p99), and
+    # means hide exactly the contention the arbiter policies differ on.
+    latency_p50: float = 0.0
+    latency_p95: float = 0.0
+    latency_p99: float = 0.0
 
 
 @dataclass
@@ -183,14 +210,25 @@ class SimResult:
         wire = self.group_wire_bytes or [0.0] * len(tags)
         out: dict[str, StreamStats] = {}
         for tag, gs in members.items():
-            lat = [self.group_finish[g] - self.group_issue[g] for g in gs]
+            # Pure compute groups (no wire moved) finish at their issue
+            # instant; counting their zero latencies would drag a traffic
+            # graph's per-tenant percentiles toward 0, so latency aggregates
+            # only over wire-moving groups (all groups when none moved wire,
+            # e.g. a compute-only stream or an untagged simulate() call).
+            lat_gs = [g for g in gs if wire[g] > 0] or gs
+            lat = [self.group_finish[g] - self.group_issue[g]
+                   for g in lat_gs]
+            lat_sorted = sorted(lat)
             out[tag] = StreamStats(
                 n=len(gs),
                 issue_first=min(self.group_issue[g] for g in gs),
                 finish=max(self.group_finish[g] for g in gs),
                 latency_mean=sum(lat) / len(lat),
-                latency_max=max(lat),
+                latency_max=lat_sorted[-1],
                 wire_bytes=sum(wire[g] for g in gs),
+                latency_p50=_percentile(lat_sorted, 0.50),
+                latency_p95=_percentile(lat_sorted, 0.95),
+                latency_p99=_percentile(lat_sorted, 0.99),
             )
         return out
 
@@ -452,6 +490,8 @@ def simulate(
     preempt_penalty_s: float | None = None,
     engine: str = "indexed",
     task_arrays: TaskArrays | None = None,
+    deps: list[tuple[int, ...]] | None = None,
+    dep_delay_s: list[float] | None = None,
 ) -> SimResult:
     """Simulate one or more collectives (``chunk_groups``).
 
@@ -489,6 +529,21 @@ def simulate(
         :func:`build_task_arrays`).  ``repro.core.batch`` passes this to
         replay one SoA build across many scenarios; ignored when the
         reference engine runs (it rebuilds its own task dict).
+    ``deps``: per-group tuple of predecessor group indices — dependency-
+        gated issue.  A group with predecessors ignores its static issue
+        time as a trigger: it becomes eligible at
+        ``max(issue_times[g], latest predecessor finish + dep_delay_s[g])``
+        once *all* its predecessors have fully finished (every chunk chain
+        retired).  A group without predecessors issues at
+        ``issue_times[g] + dep_delay_s[g]``.  Groups with an empty chunk
+        list are pure compute nodes: they finish at their eligibility
+        instant and exist only to gate dependents.  ``None`` (default) is
+        the fixed-time mode — bit-identical to the pre-dependency engine,
+        as is a ``deps`` list whose entries are all empty with zero delays.
+        The graph must be acyclic (a cycle raises once the event stream
+        drains).  ``SimResult.group_issue`` reports the resolved times.
+    ``dep_delay_s``: per-group compute delay (seconds) between the gating
+        event and the group's issue; requires ``deps``.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; want {ENGINES}")
@@ -511,6 +566,28 @@ def simulate(
         raise ValueError("tenants/streams must match chunk_groups")
     if arbiter is not None and enforced_order is not None:
         raise ValueError("arbiter and enforced_order are mutually exclusive")
+    if dep_delay_s is not None and deps is None:
+        raise ValueError("dep_delay_s requires deps")
+    if deps is not None and enforced_order is not None:
+        # An enforced per-dim order can idle a dim waiting for an op whose
+        # group is dep-gated behind that very dim — a deadlock the end-of-
+        # run cycle check would misreport.  The combination has no user
+        # today (enforced orders come from fixed-stream consistency runs).
+        raise ValueError("deps and enforced_order are mutually exclusive")
+    if deps is not None:
+        if len(deps) != n_groups:
+            raise ValueError("deps must match chunk_groups")
+        if dep_delay_s is None:
+            dep_delay_s = [0.0] * n_groups
+        elif len(dep_delay_s) != n_groups:
+            raise ValueError("dep_delay_s must match chunk_groups")
+        if any(d < 0 for d in dep_delay_s):
+            raise ValueError("dep_delay_s entries must be >= 0")
+        for g, preds in enumerate(deps):
+            for p in preds:
+                if not 0 <= p < n_groups or p == g:
+                    raise ValueError(
+                        f"group {g} has an invalid dependency {p}")
     if task_arrays is not None:
         # Replays of the same chunk_groups object (the batch path: one
         # cached TaskArrays per scenario family, many seeds) skip the
@@ -535,13 +612,14 @@ def simulate(
             priorities=priorities, intra=intra, fusion=fusion,
             fusion_limit=fusion_limit, enforced_order=enforced_order,
             jitter=jitter, seed=seed, tenants=tenants, streams=streams,
-            arbiter=arbiter, penalty=penalty, task_arrays=task_arrays)
+            arbiter=arbiter, penalty=penalty, task_arrays=task_arrays,
+            deps=deps, dep_delay=dep_delay_s)
     return _simulate_reference(
         topology, chunk_groups, issue_times=issue_times,
         priorities=priorities, intra=intra, fusion=fusion,
         fusion_limit=fusion_limit, enforced_order=enforced_order,
         jitter=jitter, seed=seed, tenants=tenants, streams=streams,
-        arbiter=arbiter, penalty=penalty)
+        arbiter=arbiter, penalty=penalty, deps=deps, dep_delay=dep_delay_s)
 
 
 # ---------------------------------------------------------------------------
@@ -563,6 +641,8 @@ def _simulate_reference(
     streams: list[str],
     arbiter,
     penalty: float,
+    deps: list[tuple[int, ...]] | None = None,
+    dep_delay: list[float] | None = None,
 ) -> SimResult:
     import random
 
@@ -600,6 +680,8 @@ def _simulate_reference(
     pending_since = [None] * num_dims  # type: list[float | None]
     enforced_pos = [0] * num_dims
     group_finish = [t for t in issue_times]  # empty groups finish at issue
+    resolved_issue = list(issue_times)       # dep mode: actual issue times
+    straggler = [d.straggler_sigma for d in topology.dims]
     seq = itertools.count()
 
     # In-flight services, keyed by validity token (sid).  Preemption bumps a
@@ -615,8 +697,59 @@ def _simulate_reference(
         task.arrival_seq = next(seq)
         heapq.heappush(events, (t, task.arrival_seq, "ready", task))
 
-    for cid in chain_len:
-        push_ready(tasks[(cid, 0)], issue_times[group_of_chunk[cid]])
+    use_deps = deps is not None
+    if use_deps:
+        # Dependency-gated release.  A group's chunks enter the event stream
+        # only once every predecessor group has fully finished (all chunk
+        # chains retired) plus the group's compute delay.  Empty groups are
+        # pure compute nodes: they finish at their eligibility instant and
+        # cascade to their dependents immediately.
+        group_roots: list[list[StageTask]] = [[] for _ in range(n_groups)]
+        for cid in chain_len:
+            group_roots[group_of_chunk[cid]].append(tasks[(cid, 0)])
+        dep_children: list[list[int]] = [[] for _ in range(n_groups)]
+        n_parents = [len(preds) for preds in deps]
+        for g, preds in enumerate(deps):
+            for p in preds:
+                dep_children[p].append(g)
+        parent_fin = [0.0] * n_groups   # running max of predecessor finishes
+        chains_left = [len(group_roots[g]) for g in range(n_groups)]
+
+        def complete_group(g: int, t: float) -> None:
+            """Group ``g`` fully finished at ``t``: release newly-eligible
+            dependents (empty dependents finish instantly and cascade)."""
+            work = [(g, t)]
+            while work:
+                gg, tt = work.pop(0)
+                for c in dep_children[gg]:
+                    if parent_fin[c] < tt:
+                        parent_fin[c] = tt
+                    n_parents[c] -= 1
+                    if n_parents[c]:
+                        continue
+                    te = max(issue_times[c], parent_fin[c] + dep_delay[c])
+                    resolved_issue[c] = te
+                    if chains_left[c]:
+                        for task in group_roots[c]:
+                            push_ready(task, te)
+                    else:
+                        group_finish[c] = te
+                        work.append((c, te))
+
+        for g in range(n_groups):
+            if deps[g]:
+                continue
+            te = issue_times[g] + dep_delay[g]
+            resolved_issue[g] = te
+            if chains_left[g]:
+                for task in group_roots[g]:
+                    push_ready(task, te)
+            else:
+                group_finish[g] = te
+                complete_group(g, te)
+    else:
+        for cid in chain_len:
+            push_ready(tasks[(cid, 0)], issue_times[group_of_chunk[cid]])
 
     def select_batch(dim: int, now: float) -> list[StageTask]:
         q = queues[dim]
@@ -697,6 +830,8 @@ def _simulate_reference(
         occupy = wire / bw  # dim is a BW resource; steps pipeline
         if jitter:
             occupy *= 1.0 + jitter * rng.random()
+        if straggler[dim]:
+            occupy *= rng.lognormvariate(0.0, straggler[dim])
         free_at = now + occupy
         busy_until[dim] = free_at
         dim_busy[dim] += occupy
@@ -800,18 +935,32 @@ def _simulate_reference(
                 nxt = (t.chunk_id, t.stage_idx + 1)
                 if nxt in tasks:
                     push_ready(tasks[nxt], now)
-                elif group_finish[t.group] < now:  # chunk chain retired
+                    continue
+                if group_finish[t.group] < now:  # chunk chain retired
                     group_finish[t.group] = now
                     if arbiter is not None:
                         arbiter.on_group_finish(
-                            t.group, t.tenant, now - issue_times[t.group])
+                            t.group, t.tenant, now - resolved_issue[t.group])
+                if use_deps:
+                    chains_left[t.group] -= 1
+                    if not chains_left[t.group]:
+                        complete_group(t.group, now)
 
     for dim in range(num_dims):
         if pending_since[dim] is not None:  # pragma: no cover - safety
             activity[dim].append((pending_since[dim], makespan))
 
+    if use_deps:
+        for g in range(n_groups):
+            if n_parents[g] > 0:
+                raise ValueError(
+                    f"dependency cycle: group {g} never became eligible")
+        if group_finish:
+            # Trailing compute nodes finish after the last network event.
+            makespan = max(makespan, max(group_finish))
+
     return SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
-                     dim_services, list(issue_times), group_finish,
+                     dim_services, resolved_issue, group_finish,
                      list(streams), list(tenants), group_wire)
 
 
@@ -835,6 +984,8 @@ def _simulate_indexed(
     arbiter,
     penalty: float,
     task_arrays: TaskArrays | None = None,
+    deps: list[tuple[int, ...]] | None = None,
+    dep_delay: list[float] | None = None,
 ) -> SimResult:
     """Same semantics as :func:`_simulate_reference`, near-linear cost.
 
@@ -858,6 +1009,7 @@ def _simulate_indexed(
     lm = LatencyModel.for_topology(topology)
     tbl = lm.stage_tables
     num_dims = topology.num_dims
+    n_groups = len(chunk_groups)
 
     # ---- struct-of-arrays task storage (integer handles) -------------------
     ta = task_arrays
@@ -896,6 +1048,8 @@ def _simulate_indexed(
     enforced_pos = [0] * num_dims
     qlen = [0] * num_dims
     group_finish = [t for t in issue_times]
+    resolved_issue = list(issue_times)       # dep mode: actual issue times
+    straggler = [d.straggler_sigma for d in topology.dims]
     seq = itertools.count()
     services: dict[int, _Service] = {}
     inflight: list[_Service | None] = [None] * num_dims
@@ -939,8 +1093,54 @@ def _simulate_indexed(
         t_arr[hh] = s
         heapq.heappush(events, (t, s, 0, hh))  # kind 0 = ready
 
-    for hh in first_handles:
-        push_ready(hh, issue_times[t_group[hh]])
+    use_deps = deps is not None
+    if use_deps:
+        # Dependency-gated release — mirrors the reference engine exactly
+        # (same release order, so the seq counter stays in lockstep).
+        group_first: list[list[int]] = [[] for _ in range(n_groups)]
+        for hh in first_handles:
+            group_first[t_group[hh]].append(hh)
+        dep_children: list[list[int]] = [[] for _ in range(n_groups)]
+        n_parents = [len(preds) for preds in deps]
+        for g, preds in enumerate(deps):
+            for p in preds:
+                dep_children[p].append(g)
+        parent_fin = [0.0] * n_groups
+        chains_left = [len(group_first[g]) for g in range(n_groups)]
+
+        def complete_group(g: int, t: float) -> None:
+            work = [(g, t)]
+            while work:
+                gg, tt = work.pop(0)
+                for c in dep_children[gg]:
+                    if parent_fin[c] < tt:
+                        parent_fin[c] = tt
+                    n_parents[c] -= 1
+                    if n_parents[c]:
+                        continue
+                    te = max(issue_times[c], parent_fin[c] + dep_delay[c])
+                    resolved_issue[c] = te
+                    if chains_left[c]:
+                        for hh in group_first[c]:
+                            push_ready(hh, te)
+                    else:
+                        group_finish[c] = te
+                        work.append((c, te))
+
+        for g in range(n_groups):
+            if deps[g]:
+                continue
+            te = issue_times[g] + dep_delay[g]
+            resolved_issue[g] = te
+            if chains_left[g]:
+                for hh in group_first[g]:
+                    push_ready(hh, te)
+            else:
+                group_finish[g] = te
+                complete_group(g, te)
+    else:
+        for hh in first_handles:
+            push_ready(hh, issue_times[t_group[hh]])
 
     def enqueue(hh: int) -> None:
         dim = t_dim[hh]
@@ -1045,6 +1245,8 @@ def _simulate_indexed(
         occupy = wire / dim_bw[dim]
         if jitter:
             occupy *= 1.0 + jitter * rng.random()
+        if straggler[dim]:
+            occupy *= rng.lognormvariate(0.0, straggler[dim])
         free_at = now + occupy
         busy_until[dim] = free_at
         dim_busy[dim] += occupy
@@ -1142,22 +1344,35 @@ def _simulate_indexed(
             for hh in svc.batch:
                 if not t_last[hh]:
                     push_ready(hh + 1, now)  # stages are contiguous handles
-                else:
-                    g = t_group[hh]
-                    if group_finish[g] < now:  # chunk chain retired
-                        group_finish[g] = now
-                        if use_arbiter:
-                            arbiter.on_group_finish(
-                                g, t_tenant[hh], now - issue_times[g])
+                    continue
+                g = t_group[hh]
+                if group_finish[g] < now:  # chunk chain retired
+                    group_finish[g] = now
+                    if use_arbiter:
+                        arbiter.on_group_finish(
+                            g, t_tenant[hh], now - resolved_issue[g])
+                if use_deps:
+                    chains_left[g] -= 1
+                    if not chains_left[g]:
+                        complete_group(g, now)
 
     for dim in range(num_dims):
         if pending_since[dim] is not None:  # pragma: no cover - safety
             activity[dim].append((pending_since[dim], makespan))
 
+    if use_deps:
+        for g in range(n_groups):
+            if n_parents[g] > 0:
+                raise ValueError(
+                    f"dependency cycle: group {g} never became eligible")
+        if group_finish:
+            # Trailing compute nodes finish after the last network event.
+            makespan = max(makespan, max(group_finish))
+
     dim_order: list[list[OpId]] = [
         [op for ops in svc_ops[dim] for op in ops] for dim in range(num_dims)]
     return SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
-                     dim_services, list(issue_times), group_finish,
+                     dim_services, resolved_issue, group_finish,
                      list(streams), list(tenants), group_wire)
 
 

@@ -211,10 +211,12 @@ def split_topology(topology: Topology, mp_npus: int) -> tuple[Topology, Topology
             outer = d.npus // inner
             if inner > 1:
                 mp_dims.append(NetworkDim(inner, d.topo, d.link_gbps,
-                                          d.links_per_npu, d.step_latency_s))
+                                          d.links_per_npu, d.step_latency_s,
+                                          d.straggler_sigma))
             if outer > 1:
                 dp_dims.append(NetworkDim(outer, d.topo, d.link_gbps,
-                                          d.links_per_npu, d.step_latency_s))
+                                          d.links_per_npu, d.step_latency_s,
+                                          d.straggler_sigma))
             prod *= d.npus
     return (
         Topology(topology.name + "-mp", tuple(mp_dims)),

@@ -23,7 +23,12 @@ from repro.tenancy.metrics import (
     slo_violations,
     tenant_reports,
 )
-from repro.tenancy.tenants import TenantJob, TenantSpec, synthetic_requests
+from repro.tenancy.tenants import (
+    TenantJob,
+    TenantSpec,
+    synthetic_requests,
+    tenant_traffic,
+)
 
 __all__ = [
     "ARBITER_POLICIES",
@@ -40,4 +45,5 @@ __all__ = [
     "slo_violations",
     "synthetic_requests",
     "tenant_reports",
+    "tenant_traffic",
 ]

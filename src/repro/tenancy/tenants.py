@@ -3,18 +3,30 @@
 A :class:`TenantSpec` describes a tenant's share contract — scheduling
 weight, optional strict priority, an SLO expressed as the maximum
 acceptable slowdown versus running alone, and its arrival offset on the
-shared fabric.  A :class:`TenantJob` binds a spec to a training
-:class:`~repro.core.workloads.Workload` and emits that workload's backprop
-bucket stream (``dp_bucket_requests``) over many iterations as
-tenant-tagged :class:`~repro.core.requests.CollectiveRequest`s, which the
-fabric layer (:mod:`repro.tenancy.fabric`) schedules and simulates jointly.
+shared fabric.  A :class:`TenantJob` binds a spec to a workload and emits
+its traffic in either representation:
+
+  * :meth:`TenantJob.requests` — the fixed-time backprop bucket stream
+    (``dp_bucket_requests``) over many iterations, as tenant-tagged
+    :class:`~repro.core.requests.CollectiveRequest`s (open-loop: iteration
+    starts are clocked by a fixed period regardless of contention);
+  * :meth:`TenantJob.traffic` — a dependency-gated
+    :class:`~repro.traffic.TrafficGraph` (closed-loop training by default;
+    any graph via ``traffic_builder`` — e.g. a *serving* prefill/decode
+    tenant, which has no training workload at all), namespaced and tagged
+    with the tenant's name so :func:`tenant_traffic` can merge many
+    tenants onto one fabric under the existing arbiters.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
+from typing import TYPE_CHECKING, Callable, Iterable
 
 from repro.core.requests import CollectiveRequest
 from repro.core.workloads import Workload, dp_bucket_requests
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard for type hints
+    from repro.traffic.ir import TrafficGraph
 
 
 @dataclass(frozen=True)
@@ -51,30 +63,45 @@ class TenantSpec:
 
 @dataclass
 class TenantJob:
-    """A tenant running a training workload: emits the workload's gradient
-    bucket stream per iteration, tagged with the tenant's name.
+    """A tenant running a workload on the shared fabric.
 
-    Iteration *i*'s backward pass starts at
+    With a training ``workload``, :meth:`requests` emits the gradient
+    bucket stream per iteration, tagged with the tenant's name: iteration
+    *i*'s backward pass starts at
     ``arrival_offset + i * period + compute_fwd``; its buckets issue
     progressively through the backward pass exactly as in the single-job
     overlap engine.  ``iteration_gap_s`` overrides the period between
     iteration starts (default: the workload's full compute time —
     communication-bound tenants then overlap their own iterations too).
+
+    ``traffic_builder`` makes the tenant's traffic an arbitrary
+    dependency-gated graph instead (see :meth:`traffic`) — serving tenants
+    pass e.g. ``lambda job: serving_traffic(...)`` and need no training
+    workload.
     """
 
     spec: TenantSpec
-    workload: Workload
+    workload: Workload | None = None
     iteration_gap_s: float | None = None
+    traffic_builder: Callable[["TenantJob"], "TrafficGraph"] | None = None
+
+    def _require_workload(self) -> Workload:
+        if self.workload is None:
+            raise ValueError(
+                f"tenant {self.spec.name!r} has no training workload; "
+                "give it one or use traffic() with a traffic_builder")
+        return self.workload
 
     @property
     def period_s(self) -> float:
         if self.iteration_gap_s is not None:
             return self.iteration_gap_s
-        return self.workload.compute_s
+        return self._require_workload().compute_s
 
     def requests(self) -> list[CollectiveRequest]:
         out: list[CollectiveRequest] = []
-        base = dp_bucket_requests(self.workload, self.spec.n_buckets)
+        base = dp_bucket_requests(self._require_workload(),
+                                  self.spec.n_buckets)
         for it in range(self.spec.iterations):
             t0 = (self.spec.arrival_offset_s + it * self.period_s
                   + self.workload.compute_fwd_s)
@@ -87,6 +114,41 @@ class TenantJob:
                     stream=f"{self.spec.name}/it{it}/{r.stream}",
                 ))
         return out
+
+    def traffic(self) -> "TrafficGraph":
+        """The tenant's dependency-gated traffic graph.
+
+        ``traffic_builder(self)`` when given, else the closed-loop
+        :func:`~repro.traffic.training_traffic` re-expression of this
+        tenant's training stream (``iteration_gap_s`` becomes the
+        iteration-start floor).  Either way the graph is namespaced under
+        the tenant's name, its requests tagged/prioritized per the spec,
+        and shifted by the arrival offset — ready to merge with other
+        tenants via :func:`tenant_traffic`.
+        """
+        from repro.traffic.builders import training_traffic
+        from repro.traffic.ir import retag
+
+        if self.traffic_builder is not None:
+            g = self.traffic_builder(self)
+        else:
+            g = training_traffic(
+                self._require_workload(), n_buckets=self.spec.n_buckets,
+                iterations=self.spec.iterations,
+                min_period_s=self.iteration_gap_s)
+        s = self.spec
+        return retag(g, name_prefix=f"{s.name}/", tenant=s.name,
+                     stream_prefix=f"{s.name}/", priority=s.priority,
+                     start_offset_s=s.arrival_offset_s)
+
+
+def tenant_traffic(jobs: Iterable[TenantJob]) -> "TrafficGraph":
+    """Merge every tenant's traffic graph into one fabric-wide graph —
+    training and serving tenants mix freely; run it with
+    ``repro.traffic.simulate_traffic(..., arbiter=FabricArbiter(...))``."""
+    from repro.traffic.ir import merge_graphs
+
+    return merge_graphs(*(job.traffic() for job in jobs))
 
 
 def synthetic_requests(

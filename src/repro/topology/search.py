@@ -68,7 +68,7 @@ def bw_split_topology(
         d = base.dims[bi]
         link_gbps = fractions[pos] * budget / (d.links_per_npu * GBPS)
         dims.append(NetworkDim(d.npus, d.topo, link_gbps, d.links_per_npu,
-                               d.step_latency_s))
+                               d.step_latency_s, d.straggler_sigma))
     if name is None:
         frac_s = "-".join(f"{f:.4g}" for f in fractions)
         name = f"{base.name}|bw[{frac_s}]|perm{''.join(map(str, perm))}"

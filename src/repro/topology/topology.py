@@ -18,13 +18,21 @@ GBPS = 1e9 / 8  # 1 Gb/s in bytes/s
 
 @dataclass(frozen=True)
 class NetworkDim:
-    """One dimension of a hierarchical NPU network."""
+    """One dimension of a hierarchical NPU network.
+
+    ``straggler_sigma`` models service-time stragglers on this dimension:
+    every service interval is multiplied by a lognormal(0, sigma) draw
+    (median 1, heavy right tail — the classic DCN tail-latency shape).
+    0.0 (default) keeps the dimension deterministic; the draw is seeded by
+    ``simulate(seed=...)`` so runs are reproducible.
+    """
 
     npus: int                      # peers participating on this dim (P_i)
     topo: TopoKind                 # physical topology of this dim
     link_gbps: float               # per-link uni-directional BW (Gb/s)
     links_per_npu: int             # links each NPU contributes to this dim
     step_latency_s: float          # min NPU->NPU message latency (s)
+    straggler_sigma: float = 0.0   # lognormal service-straggler sigma
 
     @property
     def aggr_bw_bytes(self) -> float:
@@ -61,8 +69,8 @@ class Topology:
         return "x".join(str(d.npus) for d in self.dims)
 
 
-def _dim(npus, topo, link_gbps, links, lat_ns) -> NetworkDim:
-    return NetworkDim(npus, topo, link_gbps, links, lat_ns * 1e-9)
+def _dim(npus, topo, link_gbps, links, lat_ns, straggler=0.0) -> NetworkDim:
+    return NetworkDim(npus, topo, link_gbps, links, lat_ns * 1e-9, straggler)
 
 
 SW = TopoKind.SWITCH
@@ -137,7 +145,10 @@ def make_current_topology() -> Topology:
     )
 
 
-def make_tpu_pod_topology(pods: int = 2, data: int = 16, model: int = 16) -> Topology:
+def make_tpu_pod_topology(
+    pods: int = 2, data: int = 16, model: int = 16,
+    *, dcn_straggler_sigma: float = 0.0,
+) -> Topology:
     """TPU-v5e-flavored hierarchy used by the JAX integration layer.
 
     dim1: `model` axis — ICI ring, ~50 GB/s/link (2 links usable per axis).
@@ -145,15 +156,30 @@ def make_tpu_pod_topology(pods: int = 2, data: int = 16, model: int = 16) -> Top
     dim3: `pod` axis   — DCN through NICs (~200 Gb/s per host).
 
     Dims are ordered innermost-first like the paper.
+
+    ``dcn_straggler_sigma``: lognormal straggler sigma on the DCN pod
+    dimension (ICI dims stay deterministic) — cross-pod collectives ride
+    a shared datacenter network whose tail is what Sec. 4.6's schedule-
+    consistency experiments care about.  Seeded via ``simulate(seed=...)``.
     """
+    if dcn_straggler_sigma < 0:
+        raise ValueError("dcn_straggler_sigma must be >= 0")
+    if dcn_straggler_sigma and pods <= 1:
+        raise ValueError(
+            "dcn_straggler_sigma needs a DCN dimension (pods > 1); a "
+            "single-pod topology would silently ignore it")
     dims = []
     if model > 1:
         dims.append(_dim(model, RING, 400, 2, 1000))   # 50 GB/s * 2 links
     if data > 1:
         dims.append(_dim(data, RING, 400, 2, 1000))
     if pods > 1:
-        dims.append(_dim(pods, SW, 200, 1, 20000))     # DCN NIC
-    return Topology(f"tpu-{pods}x{data}x{model}", tuple(dims))
+        dims.append(_dim(pods, SW, 200, 1, 20000,      # DCN NIC
+                         straggler=dcn_straggler_sigma))
+    name = f"tpu-{pods}x{data}x{model}"
+    if dcn_straggler_sigma and pods > 1:
+        name += f"-dcnjit{dcn_straggler_sigma:g}"
+    return Topology(name, tuple(dims))
 
 
 ALL_TOPOLOGIES: dict[str, Topology] = {

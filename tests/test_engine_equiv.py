@@ -329,6 +329,127 @@ def test_vectorized_build_handles_empty_groups():
 
 
 # ---------------------------------------------------------------------------
+# Dependency-gated streams (repro.traffic): engines + batch must agree
+# ---------------------------------------------------------------------------
+def _rand_graph(rng, n_nodes, tenants=("default",)):
+    """Random DAG: request and compute nodes with random back-edges and
+    compute delays — the adversarial shape for release-order lockstep."""
+    from repro.traffic import TrafficGraph, TrafficNode
+
+    nodes = []
+    for i in range(n_nodes):
+        n_deps = rng.randrange(0, min(i, 3) + 1) if i else 0
+        deps = tuple(f"n{j}" for j in sorted(rng.sample(range(i), n_deps)))
+        if rng.random() < 0.25:
+            nodes.append(TrafficNode(
+                f"n{i}", compute_s=rng.uniform(0, 5e-4), deps=deps,
+                start_s=rng.uniform(0, 1e-3) if not deps else 0.0,
+                tenant=rng.choice(tenants)))
+        else:
+            req = CollectiveRequest(
+                rng.choice(("AR", "RS", "AG")), rng.uniform(1, 40) * MB,
+                priority=rng.choice((0, 0, 1)), stream=f"s{i % 3}",
+                tenant=rng.choice(tenants))
+            nodes.append(TrafficNode(
+                f"n{i}", request=req, compute_s=rng.uniform(0, 2e-4),
+                deps=deps,
+                start_s=rng.uniform(0, 1e-3) if not deps else 0.0))
+    return TrafficGraph(tuple(nodes))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_engines_agree_on_dependency_graphs(policy):
+    from repro.traffic import simulate_traffic
+
+    rng = random.Random(500 + POLICIES.index(policy))
+    for tname in ("2D-SW_SW", "3D-SW_SW_SW_hetero", "4D-Ring_FC_Ring_SW"):
+        topo = TOPOS[tname]
+        graph = _rand_graph(rng, 14)
+        for intra in ("SCF", "FIFO"):
+            kw = dict(policy=policy, chunks_per_collective=6, intra=intra)
+            ri, gi = simulate_traffic(topo, graph, engine="indexed", **kw)
+            rr, gr = simulate_traffic(topo, graph, engine="reference", **kw)
+            assert_same(ri, rr)
+            assert [[c.schedule for c in g] for g in gi] == [
+                [c.schedule for c in g] for g in gr]
+
+
+@pytest.mark.parametrize("arb_policy", ARB_POLICIES)
+def test_engines_agree_on_dependency_graphs_under_arbiters(arb_policy):
+    from repro.traffic import simulate_traffic
+
+    rng = random.Random(600 + ARB_POLICIES.index(arb_policy))
+    specs = [TenantSpec("a", weight=2.0),
+             TenantSpec("b", weight=1.0, priority=1, slo_slowdown=1.5)]
+    topo = TOPOS["3D-SW_SW_SW_hetero"]
+    graph = _rand_graph(rng, 16, tenants=("a", "b"))
+    out = {}
+    arbs = {}
+    for eng in ("indexed", "reference"):
+        arb = FabricArbiter(arb_policy, specs, quantum_chunks=4,
+                            isolated_latency={"b": 0.001})
+        arbs[eng] = arb
+        out[eng], _ = simulate_traffic(topo, graph, chunks_per_collective=6,
+                                       arbiter=arb, engine=eng)
+    assert_same(out["indexed"], out["reference"])
+    assert (arbs["indexed"].preempt_count
+            == arbs["reference"].preempt_count)
+
+
+def test_engines_agree_on_dependency_graphs_with_jitter_and_straggler():
+    from repro.topology import make_tpu_pod_topology
+    from repro.traffic import simulate_traffic
+
+    rng = random.Random(77)
+    topo = make_tpu_pod_topology(2, 4, 4, dcn_straggler_sigma=0.4)
+    for seed in (0, 3):
+        graph = _rand_graph(rng, 12)
+        kw = dict(chunks_per_collective=5, jitter=0.1, seed=seed)
+        ri, _ = simulate_traffic(topo, graph, engine="indexed", **kw)
+        rr, _ = simulate_traffic(topo, graph, engine="reference", **kw)
+        assert_same(ri, rr)
+
+
+def test_simulate_batch_matches_standalone_for_traffic_scenarios():
+    from repro.traffic import simulate_traffic
+
+    rng = random.Random(91)
+    specs = [TenantSpec("a", weight=2.0), TenantSpec("b")]
+    scenarios = []
+    for tname in ("2D-SW_SW", "3D-SW_SW_SW_hetero"):
+        graph = _rand_graph(rng, 12, tenants=("a", "b"))
+        factory = lambda: FabricArbiter("weighted-fair", specs)  # noqa: E731
+        for jitter, seed in ((0.0, 0), (0.1, 5)):
+            scenarios.append(Scenario(
+                TOPOS[tname], traffic=graph, chunks_per_collective=6,
+                jitter=jitter, seed=seed))
+            scenarios.append(Scenario(
+                TOPOS[tname], traffic=graph, chunks_per_collective=6,
+                jitter=jitter, seed=seed, arbiter_factory=factory))
+    caches = BatchCaches()
+    for rb, sc in zip(simulate_batch(scenarios, caches=caches), scenarios):
+        assert_same(rb, simulate_scenario(sc))
+    # warm replay across batches must not drift either
+    for rb, sc in zip(simulate_batch(scenarios, caches=caches), scenarios):
+        assert_same(rb, simulate_scenario(sc))
+    # standalone traffic path equals an explicit simulate_traffic call
+    sc0 = scenarios[0]
+    res, _ = simulate_traffic(sc0.topology, sc0.traffic,
+                              chunks_per_collective=6)
+    assert_same(res, simulate_scenario(sc0))
+
+
+def test_scenario_rejects_both_requests_and_traffic():
+    from repro.traffic import from_requests
+
+    reqs = (CollectiveRequest("AR", MB),)
+    with pytest.raises(ValueError, match="not both"):
+        Scenario(TOPOS["2D-SW_SW"], reqs, traffic=from_requests(reqs))
+    with pytest.raises(ValueError, match="requests or traffic"):
+        Scenario(TOPOS["2D-SW_SW"])  # neither is an empty sweep point
+
+
+# ---------------------------------------------------------------------------
 # Scheduler reuse contract (simulate_requests(scheduler=...))
 # ---------------------------------------------------------------------------
 def test_shared_scheduler_is_bit_identical_and_does_not_leak_state():

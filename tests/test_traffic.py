@@ -1,0 +1,401 @@
+"""Dependency-aware traffic IR: validation, semantics, builders, tenancy.
+
+Engine bit-equivalence for dependency-gated streams lives in
+``test_engine_equiv.py``; this file covers the IR itself and the timing
+semantics the simulator must honor.
+"""
+import math
+import random
+
+import pytest
+
+from repro.core.requests import CollectiveRequest
+from repro.core.simulator import simulate, simulate_requests
+from repro.core.workloads import make_resnet152
+from repro.tenancy import FabricArbiter, TenantJob, TenantSpec, tenant_traffic
+from repro.topology import make_table2_topologies, make_tpu_pod_topology
+from repro.traffic import (
+    TrafficGraph,
+    TrafficNode,
+    from_requests,
+    merge_graphs,
+    pipeline_traffic,
+    retag,
+    serving_costs_from_arch,
+    serving_traffic,
+    simulate_traffic,
+    training_traffic,
+)
+
+TOPOS = make_table2_topologies()
+MB = 1e6
+
+
+# ---------------------------------------------------------------------------
+# IR validation
+# ---------------------------------------------------------------------------
+def test_graph_rejects_duplicate_names():
+    with pytest.raises(ValueError, match="duplicate node name"):
+        TrafficGraph((TrafficNode("a"), TrafficNode("a")))
+
+
+def test_graph_rejects_unknown_dep():
+    with pytest.raises(ValueError, match="unknown node"):
+        TrafficGraph((TrafficNode("a", deps=("ghost",)),))
+
+
+def test_graph_rejects_cycles_including_self():
+    with pytest.raises(ValueError, match="cycle"):
+        TrafficGraph((TrafficNode("a", deps=("b",)),
+                      TrafficNode("b", deps=("a",))))
+    with pytest.raises(ValueError, match="cycle"):
+        TrafficGraph((TrafficNode("a", deps=("a",)),))
+
+
+def test_graph_allows_forward_references():
+    g = TrafficGraph((TrafficNode("late", deps=("early",)),
+                      TrafficNode("early", compute_s=1.0)))
+    assert g.topo_order == (1, 0)
+    est_issue, _ = g.estimate_times()
+    assert est_issue == [1.0, 1.0]
+
+
+def test_node_validation():
+    with pytest.raises(ValueError):
+        TrafficNode("x", compute_s=-1.0)
+    with pytest.raises(ValueError):
+        TrafficNode("x", start_s=-1.0)
+    with pytest.raises(ValueError):
+        TrafficNode("")
+    # an embedded request issue_time that start_s does not honor is a
+    # silent-migration trap — reject it (from_requests sets both)
+    with pytest.raises(ValueError, match="issue_time"):
+        TrafficNode("x", request=CollectiveRequest("AR", MB, issue_time=5.0))
+    TrafficNode("x", request=CollectiveRequest("AR", MB, issue_time=5.0),
+                start_s=5.0)  # agreeing times are fine
+
+
+def test_simulate_validates_dep_arguments():
+    topo = TOPOS["2D-SW_SW"]
+    with pytest.raises(ValueError, match="requires deps"):
+        simulate(topo, [[]], dep_delay_s=[0.0])
+    with pytest.raises(ValueError, match="invalid dependency"):
+        simulate(topo, [[], []], deps=[(), (5,)])
+    with pytest.raises(ValueError, match="invalid dependency"):
+        simulate(topo, [[]], deps=[(0,)])  # self-dependency
+    with pytest.raises(ValueError, match="must match"):
+        simulate(topo, [[], []], deps=[()])
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        simulate(topo, [[]], deps=[()], enforced_order=[[]])
+
+
+# ---------------------------------------------------------------------------
+# Fixed-time streams through the IR reproduce today's results exactly
+# ---------------------------------------------------------------------------
+def test_fixed_time_graph_bit_identical_to_simulate_requests():
+    rng = random.Random(11)
+    for tname in ("2D-SW_SW", "3D-SW_SW_SW_hetero"):
+        topo = TOPOS[tname]
+        reqs = [
+            CollectiveRequest(rng.choice(("AR", "RS", "AG")),
+                              rng.uniform(1, 50) * MB,
+                              issue_time=rng.uniform(0, 2e-3),
+                              priority=rng.choice((0, 1)),
+                              stream=f"s{i % 3}", tenant=f"t{i % 2}")
+            for i in range(12)
+        ]
+        r0, g0 = simulate_requests(topo, reqs, chunks_per_collective=6)
+        r1, g1 = simulate_traffic(topo, from_requests(reqs),
+                                  chunks_per_collective=6)
+        assert r1.diff_fields(r0) == []
+        assert [[c.schedule for c in g] for g in g0] == [
+            [c.schedule for c in g] for g in g1]
+
+
+# ---------------------------------------------------------------------------
+# Dependency-gating semantics
+# ---------------------------------------------------------------------------
+def test_dependent_group_issues_at_parent_finish_plus_delay():
+    topo = TOPOS["2D-SW_SW"]
+    delay = 3e-4
+    g = TrafficGraph((
+        TrafficNode("a", request=CollectiveRequest("AR", 20 * MB)),
+        TrafficNode("b", request=CollectiveRequest("AR", 20 * MB),
+                    compute_s=delay, deps=("a",)),
+    ))
+    res, _ = simulate_traffic(topo, g, chunks_per_collective=4)
+    ia, ib = g.index_of("a"), g.index_of("b")
+    assert res.group_issue[ib] == res.group_finish[ia] + delay
+    assert res.group_finish[ib] > res.group_issue[ib]
+
+
+def test_start_floor_bounds_dependent_issue():
+    topo = TOPOS["2D-SW_SW"]
+    g = TrafficGraph((
+        TrafficNode("a", request=CollectiveRequest("AR", 1 * MB)),
+        TrafficNode("b", request=CollectiveRequest("AR", 1 * MB),
+                    deps=("a",), start_s=1.0),  # floor far beyond a's finish
+    ))
+    res, _ = simulate_traffic(topo, g, chunks_per_collective=2)
+    assert res.group_issue[g.index_of("b")] == 1.0
+    assert res.makespan >= 1.0
+
+
+def test_compute_only_chain_accumulates_delays():
+    topo = TOPOS["2D-SW_SW"]
+    g = TrafficGraph((
+        TrafficNode("c0", compute_s=0.5, start_s=0.25),
+        TrafficNode("c1", compute_s=0.5, deps=("c0",)),
+        TrafficNode("c2", compute_s=0.5, deps=("c1",)),
+    ))
+    res, _ = simulate_traffic(topo, g)
+    assert res.group_finish == [0.75, 1.25, 1.75]
+    assert res.makespan == 1.75  # trailing compute advances the makespan
+
+
+def test_multi_parent_gate_waits_for_latest():
+    topo = TOPOS["2D-SW_SW"]
+    g = TrafficGraph((
+        TrafficNode("fast", compute_s=0.1),
+        TrafficNode("slow", compute_s=0.9),
+        TrafficNode("join", request=CollectiveRequest("AR", 4 * MB),
+                    deps=("fast", "slow")),
+    ))
+    res, _ = simulate_traffic(topo, g, chunks_per_collective=2)
+    assert res.group_issue[g.index_of("join")] == 0.9
+
+
+def test_root_request_with_compute_issues_after_compute():
+    topo = TOPOS["2D-SW_SW"]
+    g = TrafficGraph((
+        TrafficNode("r", request=CollectiveRequest("AR", 4 * MB),
+                    compute_s=0.2, start_s=0.1),
+    ))
+    res, _ = simulate_traffic(topo, g, chunks_per_collective=2)
+    assert res.group_issue[0] == pytest.approx(0.3)
+
+
+# ---------------------------------------------------------------------------
+# Stream percentiles (serving SLO reporting)
+# ---------------------------------------------------------------------------
+def test_stream_stats_percentiles():
+    topo = TOPOS["2D-SW_SW"]
+    reqs = [CollectiveRequest("AR", (i + 1) * 4 * MB, issue_time=i * 0.05,
+                              stream="s")
+            for i in range(10)]
+    res, _ = simulate_requests(topo, reqs, chunks_per_collective=4)
+    st = res.stream_stats()["s"]
+    lats = sorted(res.group_finish[i] - res.group_issue[i]
+                  for i in range(10))
+    # linear-interpolation percentiles over the 10 latencies
+    assert st.latency_p50 == pytest.approx(
+        lats[4] + 0.5 * (lats[5] - lats[4]))
+    assert st.latency_p99 == pytest.approx(
+        lats[8] + 0.91 * (lats[9] - lats[8]))
+    assert st.latency_p50 <= st.latency_p95 <= st.latency_p99
+    assert st.latency_p99 <= st.latency_max
+
+
+def test_tenant_percentiles_exclude_compute_nodes():
+    """A training tenant's graph is mostly compute nodes (gates, spines,
+    barriers) with zero latency; per-tenant latency aggregates must only
+    count the wire-moving groups or the percentiles collapse to ~0."""
+    wl = make_resnet152()
+    topo = make_tpu_pod_topology(2, 4, 4)
+    g = retag(training_traffic(wl, n_buckets=8, iterations=2),
+              name_prefix="train/", tenant="train")
+    res, _ = simulate_traffic(topo, g, chunks_per_collective=8)
+    st = res.stream_stats(by="tenant")["train"]
+    req_lats = sorted(res.group_finish[i] - res.group_issue[i]
+                      for i, n in enumerate(g.nodes) if n.request is not None)
+    assert st.latency_p50 >= req_lats[0] > 0
+    assert st.latency_mean == pytest.approx(sum(req_lats) / len(req_lats))
+    # compute-only streams still aggregate (over their zero latencies)
+    assert res.stream_stats()["compute"].latency_max == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+def test_training_traffic_matches_fixed_stream_when_uncontended():
+    """One iteration on an idle fabric: the dependency-gated bucket stream
+    must issue each bucket exactly where dp_bucket_requests puts it
+    (fwd compute + the bucket's backward-retirement instant)."""
+    from repro.core.workloads import dp_bucket_requests
+
+    wl = make_resnet152()
+    topo = make_tpu_pod_topology(1, 8, 8)
+    g = training_traffic(wl, n_buckets=8, iterations=1)
+    res, _ = simulate_traffic(topo, g, chunks_per_collective=8)
+    base = dp_bucket_requests(wl, 8)
+    got = sorted(res.group_issue[i] for i, n in enumerate(g.nodes)
+                 if n.request is not None)
+    want = sorted(wl.compute_fwd_s + r.issue_time for r in base)
+    assert got == pytest.approx(want)
+
+
+def test_training_traffic_multi_iteration_is_closed_loop():
+    """Iteration i+1's forward must start only after iteration i's slowest
+    gradient collective drained — under contention that is later than the
+    fixed-gap stream's clocked start."""
+    wl = make_resnet152()
+    topo = make_tpu_pod_topology(2, 4, 4)
+    g = training_traffic(wl, n_buckets=8, iterations=3)
+    res, _ = simulate_traffic(topo, g, chunks_per_collective=8)
+    for it in range(2):
+        step_fin = res.group_finish[g.index_of(f"{wl.name}/it{it}/step")]
+        nxt = res.group_issue[g.index_of(f"{wl.name}/it{it + 1}/start")]
+        assert nxt == step_fin
+        reqs_fin = max(res.group_finish[i]
+                       for i, n in enumerate(g.nodes)
+                       if n.request is not None
+                       and n.name.startswith(f"{wl.name}/it{it}/"))
+        assert step_fin >= reqs_fin
+
+
+def test_pipeline_traffic_1f1b_structure():
+    S, M, fwd = 4, 6, 1e-3
+    g = pipeline_traffic(stages=S, microbatches=M, fwd_s=fwd, bwd_s=2e-3,
+                         act_bytes=8 * MB, grad_ar_bytes=40 * MB,
+                         n_grad_buckets=4)
+    topo = TOPOS["3D-SW_SW_SW_homo"]
+    res, _ = simulate_traffic(topo, g, chunks_per_collective=4)
+    # Pipeline fill: stage s's first forward cannot complete before
+    # (s+1) forward computes plus s activation transfers have happened.
+    for s in range(S):
+        fin = res.group_finish[g.index_of(f"pp/s{s}/f0")]
+        assert fin >= (s + 1) * fwd
+    # The last stage's first backward follows its first forward (1F1B).
+    assert (res.group_issue[g.index_of(f"pp/s{S - 1}/b0")]
+            >= res.group_finish[g.index_of(f"pp/s{S - 1}/f0")])
+    # Every stage serializes M forwards + M backwards of compute.
+    assert res.makespan >= M * (1e-3 + 2e-3)
+    # DP gradient buckets ride behind each stage's last backward.
+    for s in range(S):
+        assert (res.group_issue[g.index_of(f"pp/s{s}/dp-ar0")]
+                >= res.group_finish[g.index_of(f"pp/s{s}/b{M - 1}")])
+    st = res.stream_stats()
+    assert {"pp-act", "pp-grad", "pp-dp", "pp-compute"} <= set(st)
+
+
+def test_serving_traffic_decode_chain_is_sequential():
+    topo = make_tpu_pod_topology(1, 8, 8)
+    dec_s = 2e-4
+    g = serving_traffic(prefill_bytes=32 * MB, decode_bytes=1 * MB,
+                        prefill_s=1e-3, decode_s=dec_s, gen_tokens=8,
+                        n_requests=2, arrival_gap_s=5e-3)
+    res, _ = simulate_traffic(topo, g, chunks_per_collective=4)
+    for r in range(2):
+        prev_fin = None
+        for t in range(8):
+            i = g.index_of(f"serve/r{r}/decode{t}")
+            if prev_fin is not None:
+                assert res.group_issue[i] == pytest.approx(prev_fin + dec_s)
+            prev_fin = res.group_finish[i]
+        # prefill burst: all ops share one eligibility instant
+        burst = [res.group_issue[g.index_of(f"serve/r{r}/prefill{j}")]
+                 for j in range(4)]
+        assert len(set(burst)) == 1
+    assert res.stream_stats()["decode"].n == 16
+
+
+def test_serving_costs_from_arch_are_sane():
+    costs = serving_costs_from_arch("llama3-8b", batch=4, prompt_len=256,
+                                    tp=8)
+    assert costs["prefill_bytes"] > costs["decode_bytes"] > 0
+    assert costs["prefill_s"] > costs["decode_s"] > 0
+    # decode moves ~2 collectives/layer of one token's activations
+    assert costs["decode_bytes"] < 64 * MB
+
+
+# ---------------------------------------------------------------------------
+# retag / merge / tenancy integration
+# ---------------------------------------------------------------------------
+def test_retag_namespaces_and_offsets():
+    g = serving_traffic(prefill_bytes=8 * MB, decode_bytes=MB,
+                        prefill_s=1e-3, decode_s=1e-4, gen_tokens=2)
+    t = retag(g, name_prefix="svc/", tenant="svc", stream_prefix="svc/",
+              priority=2, start_offset_s=0.5)
+    assert all(n.name.startswith("svc/") for n in t.nodes)
+    assert all(n.tenant_tag == "svc" for n in t.nodes)
+    req_nodes = [n for n in t.nodes if n.request is not None]
+    assert all(n.request.priority == 2 for n in req_nodes)
+    assert all(n.stream_tag.startswith("svc/") for n in t.nodes)
+    root = t.node("svc/serve/r0/prefill-compute")
+    assert root.start_s == pytest.approx(0.5)
+    # a node-level tenant set by a builder must not survive the override
+    g2 = TrafficGraph((TrafficNode(
+        "a", request=CollectiveRequest("AR", MB), tenant="builder-set"),))
+    t2 = retag(g2, tenant="t1")
+    assert t2.nodes[0].tenant_tag == "t1"
+    assert t2.nodes[0].request.tenant == "t1"
+    # retag shifts start_s past an embedded issue_time without tripping
+    # the node validation (the stale request time is dropped)
+    g3 = from_requests([CollectiveRequest("AR", MB, issue_time=0.25)])
+    t3 = retag(g3, start_offset_s=1.0)
+    assert t3.nodes[0].start_s == pytest.approx(1.25)
+    assert t3.nodes[0].request.issue_time == 0.0
+
+
+def test_merge_graphs_rejects_collisions():
+    g = serving_traffic(prefill_bytes=MB, decode_bytes=MB, prefill_s=0.0,
+                        decode_s=0.0, gen_tokens=1)
+    with pytest.raises(ValueError, match="duplicate"):
+        merge_graphs(g, g)
+
+
+def test_mixed_training_serving_tenants_under_arbiter():
+    topo = make_tpu_pod_topology(2, 8, 8)
+    train = TenantJob(TenantSpec("train", iterations=2, n_buckets=8),
+                      make_resnet152())
+    serve = TenantJob(
+        TenantSpec("serve", weight=2.0, slo_slowdown=1.2),
+        traffic_builder=lambda job: serving_traffic(
+            prefill_bytes=48 * MB, decode_bytes=1.5 * MB, prefill_s=2e-3,
+            decode_s=2e-4, gen_tokens=10, n_requests=2, arrival_gap_s=2e-3))
+    graph = tenant_traffic([train, serve])
+    specs = [train.spec, serve.spec]
+    finishes = {}
+    for pol in ("fifo", "weighted-fair"):
+        res, _ = simulate_traffic(topo, graph, chunks_per_collective=8,
+                                  arbiter=FabricArbiter(pol, specs))
+        by_tenant = res.stream_stats(by="tenant")
+        assert {"train", "serve"} <= set(by_tenant)
+        st = res.stream_stats()["serve/decode"]
+        assert st.n == 20 and st.latency_p99 >= st.latency_p50 > 0
+        finishes[pol] = res.finish_time()
+    assert all(math.isfinite(v) for v in finishes.values())
+
+
+def test_tenant_job_backward_compat_and_guards():
+    job = TenantJob(TenantSpec("t", iterations=2), make_resnet152())
+    assert len(job.requests()) > 0  # fixed-time path unchanged
+    assert job.traffic().n_requests > 0
+    bare = TenantJob(TenantSpec("bare"))
+    with pytest.raises(ValueError, match="no training workload"):
+        bare.requests()
+    with pytest.raises(ValueError, match="no training workload"):
+        bare.traffic()
+
+
+# ---------------------------------------------------------------------------
+# DCN straggler jitter
+# ---------------------------------------------------------------------------
+def test_dcn_straggler_is_seeded_and_pod_scoped():
+    wl = make_resnet152()
+    g = training_traffic(wl, n_buckets=8, iterations=1)
+    base = make_tpu_pod_topology(2, 4, 4)
+    jit = make_tpu_pod_topology(2, 4, 4, dcn_straggler_sigma=0.5)
+    assert jit.dims[-1].straggler_sigma == 0.5
+    assert all(d.straggler_sigma == 0.0 for d in jit.dims[:-1])
+    r0, _ = simulate_traffic(base, g, chunks_per_collective=8, seed=7)
+    a, _ = simulate_traffic(jit, g, chunks_per_collective=8, seed=7)
+    b, _ = simulate_traffic(jit, g, chunks_per_collective=8, seed=7)
+    c, _ = simulate_traffic(jit, g, chunks_per_collective=8, seed=8)
+    assert a.diff_fields(b) == []          # same seed -> identical
+    assert a.makespan != c.makespan        # seed moves the draw
+    assert a.makespan != r0.makespan       # sigma=0 topo is unperturbed
+    with pytest.raises(ValueError):
+        make_tpu_pod_topology(dcn_straggler_sigma=-0.1)
+    with pytest.raises(ValueError, match="pods > 1"):
+        make_tpu_pod_topology(1, 8, 8, dcn_straggler_sigma=0.5)
