@@ -28,6 +28,7 @@ def main() -> None:
         tenancy_study,
         topo_search,
         traffic_study,
+        verify_study,
     )
     from benchmarks.common import print_rows
 
@@ -42,6 +43,7 @@ def main() -> None:
         ("sched_perf", sched_perf),
         ("topo_search", topo_search),
         ("traffic", traffic_study),
+        ("verify", verify_study),
         ("insights", insights_study),
         ("beyond", beyond_paper),
         ("roofline", roofline_table),

@@ -7,6 +7,8 @@ Three parts, all emitted into ``BENCH_sched_perf.json``:
     both engines; every ``SimResult`` field (makespan, per-dim wire bytes /
     busy time / service logs / op order, per-request finish times) must be
     **bit-identical**.  Any mismatch raises, failing the benchmark (and CI).
+    The gate runs with ``check_invariants=True``, so the runtime invariant
+    sanitizer (``repro.core.invariants``) audits every scenario too.
   * **headline** — the 256-request x 64-chunk ``simulate_requests`` stream
     (quick mode: 64 x 16).  Both engines are timed on identical inputs; the
     full run asserts the indexed engine is >= 20x faster with equal results.
@@ -76,10 +78,12 @@ def equivalence_gate(topos, quick: bool) -> list[str]:
                         for i in range(18)]
                 ri, _ = simulate_requests(topo, reqs, policy=policy,
                                           chunks_per_collective=8,
-                                          intra=intra, engine="indexed")
+                                          intra=intra, engine="indexed",
+                                          check_invariants=True)
                 rr, _ = simulate_requests(topo, reqs, policy=policy,
                                           chunks_per_collective=8,
-                                          intra=intra, engine="reference")
+                                          intra=intra, engine="reference",
+                                          check_invariants=True)
                 label = f"{tname}/{policy}/{intra}"
                 _assert_equal(ri, rr, label)
                 checked.append(label)
@@ -98,7 +102,8 @@ def equivalence_gate(topos, quick: bool) -> list[str]:
                                     isolated_latency={"light": 0.001})
                 out[eng], _ = simulate_fabric(topo, reqs, arbiter=arb,
                                               chunks_per_collective=8,
-                                              engine=eng)
+                                              engine=eng,
+                                              check_invariants=True)
             label = f"{tname}/arbiter:{arb_policy}"
             _assert_equal(out["indexed"], out["reference"], label)
             checked.append(label)

@@ -1,0 +1,137 @@
+"""Verification study: SMT prover verdicts + runtime sanitizer overhead.
+
+Three parts, emitted into ``BENCH_verify.json``:
+
+  * **prover** — runs :func:`repro.verify.verify_suite` over the default
+    instance grid: every (instance, property) decision, which backend
+    decided it (witness evaluation always; z3 proof when installed), and
+    every refutation's dual-engine counterexample replay.  The expected
+    verdict pattern is asserted here, so CI fails if a verdict flips:
+    conservation/ordering/starvation theorems proved everywhere,
+    bounded_slowdown proved under the clamped weighted-fair arbiter and
+    refuted for the stale-clock and fifo instances.
+  * **sanitizer** — times a pinned multi-tenant preemption stream on both
+    engines with ``check_invariants`` off and on.  Off must cost nothing
+    measurable (it is one predicate per event); the JSON records both
+    ratios so a regression shows up in the artifact trail.
+  * **environment** — whether z3 was importable (the native witness
+    backend is authoritative either way).
+
+Run standalone (``python -m benchmarks.verify_study [--quick]``) or via
+``python -m benchmarks.run verify``.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.common import row, timed_best
+from repro.core.requests import CollectiveRequest
+from repro.core.simulator import simulate_requests
+from repro.tenancy import FabricArbiter, TenantSpec
+from repro.topology import make_table2_topologies
+from repro.verify import verify_suite, z3_available
+
+MB = 1e6
+OUT_JSON = Path(__file__).resolve().parents[1] / "BENCH_verify.json"
+
+# (instance, property) -> expected verdict; anything else in the report
+# must be proved.  A flip here is a semantics change, not noise.
+EXPECTED_REFUTED = {
+    ("wf-rearrival-stale", "bounded_slowdown"),
+    ("fifo-mixed", "bounded_slowdown"),
+}
+
+
+def prover_part(quick: bool) -> tuple[dict, list]:
+    rep = verify_suite(quick=quick)
+    rows = []
+    for v in rep["verdicts"]:
+        key = (v["instance"], v["property"])
+        want = "refuted" if key in EXPECTED_REFUTED else "proved"
+        if v["status"] != want:
+            raise AssertionError(
+                f"verdict flip: {key} is {v['status']}, expected {want}")
+        if v["status"] == "refuted":
+            if not v["replays"]:
+                raise AssertionError(f"refutation {key} has no replay")
+            for r in v["replays"]:
+                if not r["engines_bit_identical"]:
+                    raise AssertionError(f"replay of {key} diverged")
+    refuted = [v for v in rep["verdicts"] if v["status"] == "refuted"]
+    rows.append(row(
+        "verify/prover", 0.0,
+        f"decided={rep['n_decided']} proved={rep['n_proved']} "
+        f"refuted={rep['n_refuted']} "
+        f"properties={len(rep['properties_decided'])} "
+        f"replays={sum(len(v['replays']) for v in refuted)}"))
+    return rep, rows
+
+
+def sanitizer_part(quick: bool) -> tuple[dict, list]:
+    n_req = 24 if quick else 64
+    topo = make_table2_topologies()["2D-SW_SW"]
+    specs = [TenantSpec("heavy", weight=1.0),
+             TenantSpec("light", weight=4.0, priority=5)]
+    reqs = [CollectiveRequest(
+        "AR", (200.0 if i % 4 == 0 else 4.0) * MB,
+        issue_time=i * 2e-4, tenant="heavy" if i % 4 == 0 else "light")
+        for i in range(n_req)]
+
+    def run_once(eng: str, chk: bool):
+        arb = FabricArbiter("weighted-fair", specs, quantum_chunks=8,
+                            preemption=True)
+        return simulate_requests(topo, reqs, chunks_per_collective=16,
+                                 arbiter=arb, engine=eng,
+                                 check_invariants=chk)
+
+    out: dict = {}
+    rows = []
+    repeat = 3 if quick else 5
+    for eng in ("indexed", "reference"):
+        (res_off, _), t_off = timed_best(run_once, eng, False,
+                                         repeat=repeat)
+        (res_on, _), t_on = timed_best(run_once, eng, True, repeat=repeat)
+        if res_off.diff_fields(res_on):
+            raise AssertionError(
+                f"check_invariants changed {eng} results: "
+                f"{res_off.diff_fields(res_on)}")
+        out[eng] = {"off_s": t_off, "on_s": t_on,
+                    "on_over_off": t_on / t_off}
+        rows.append(row(
+            f"verify/sanitizer/{eng}", t_off * 1e6,
+            f"on/off={t_on / t_off:.2f}x results_identical=True"))
+    return out, rows
+
+
+def run(quick: bool = False):
+    prover, rows = prover_part(quick)
+    sanitizer, san_rows = sanitizer_part(quick)
+    rows += san_rows
+    report = {
+        "quick": quick,
+        "z3_available": z3_available(),
+        "prover": prover,
+        "sanitizer": sanitizer,
+        "checks": {
+            "verdict_pattern_ok": True,
+            "replays_bit_identical": True,
+            "sanitizer_results_identical": True,
+        },
+    }
+    OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
+    rows.append(row("verify/json", 0.0, f"json={OUT_JSON.name}"))
+    return rows
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv[1:]
+    from benchmarks.common import print_rows
+
+    print("name,us_per_call,derived")
+    print_rows(run(quick=quick))
+
+
+if __name__ == "__main__":
+    main()

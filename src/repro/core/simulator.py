@@ -75,6 +75,11 @@ import itertools
 from dataclasses import dataclass, field
 
 from repro.core.chunking import Chunk
+from repro.core.invariants import (
+    check_final,
+    check_service_start,
+    check_work_conserving,
+)
 from repro.core.latency_model import LatencyModel
 from repro.core.requests import CollectiveRequest
 from repro.topology import Phase, Topology
@@ -492,6 +497,7 @@ def simulate(
     task_arrays: TaskArrays | None = None,
     deps: list[tuple[int, ...]] | None = None,
     dep_delay_s: list[float] | None = None,
+    check_invariants: bool = False,
 ) -> SimResult:
     """Simulate one or more collectives (``chunk_groups``).
 
@@ -544,6 +550,16 @@ def simulate(
         drains).  ``SimResult.group_issue`` reports the resolved times.
     ``dep_delay_s``: per-group compute delay (seconds) between the gating
         event and the group's issue; requires ``deps``.
+    ``check_invariants``: arm the runtime invariant sanitizer
+        (``repro.core.invariants``) inside the event loop of either engine:
+        bytes conservation across preemption splits, per-dim service
+        ordering, work conservation at every event boundary, and (under an
+        arbiter) the served-bytes ledger vs the engine's wire accounting —
+        the ledger check assumes the arbiter's pre-existing state is the
+        ``served_snapshot()`` taken at entry, so reuse across calls is
+        fine.  Violations raise
+        :class:`repro.core.invariants.InvariantViolation`.  Off (default)
+        costs one branch per event.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; want {ENGINES}")
@@ -613,13 +629,14 @@ def simulate(
             fusion_limit=fusion_limit, enforced_order=enforced_order,
             jitter=jitter, seed=seed, tenants=tenants, streams=streams,
             arbiter=arbiter, penalty=penalty, task_arrays=task_arrays,
-            deps=deps, dep_delay=dep_delay_s)
+            deps=deps, dep_delay=dep_delay_s, chk=check_invariants)
     return _simulate_reference(
         topology, chunk_groups, issue_times=issue_times,
         priorities=priorities, intra=intra, fusion=fusion,
         fusion_limit=fusion_limit, enforced_order=enforced_order,
         jitter=jitter, seed=seed, tenants=tenants, streams=streams,
-        arbiter=arbiter, penalty=penalty, deps=deps, dep_delay=dep_delay_s)
+        arbiter=arbiter, penalty=penalty, deps=deps, dep_delay=dep_delay_s,
+        chk=check_invariants)
 
 
 # ---------------------------------------------------------------------------
@@ -643,6 +660,7 @@ def _simulate_reference(
     penalty: float,
     deps: list[tuple[int, ...]] | None = None,
     dep_delay: list[float] | None = None,
+    chk: bool = False,
 ) -> SimResult:
     import random
 
@@ -688,6 +706,12 @@ def _simulate_reference(
     # service's sid so its already-scheduled free/done events become stale.
     services: dict[int, _Service] = {}
     inflight: list[_Service | None] = [None] * num_dims
+    use_enforced = enforced_order is not None
+
+    # Arrival hook (the fair-policy virtual-time clamp) + sanitizer baseline.
+    on_enq = getattr(arbiter, "on_enqueued", None)
+    served_base = (arbiter.served_snapshot()
+                   if chk and hasattr(arbiter, "served_snapshot") else None)
 
     # Event heap: (time, tiebreak, kind, payload)
     events: list[tuple[float, int, str, object]] = []
@@ -832,6 +856,9 @@ def _simulate_reference(
             occupy *= 1.0 + jitter * rng.random()
         if straggler[dim]:
             occupy *= rng.lognormvariate(0.0, straggler[dim])
+        if chk and dim_services[dim]:
+            check_service_start(dim, now, dim_services[dim][-1][1],
+                                "reference")
         free_at = now + occupy
         busy_until[dim] = free_at
         dim_busy[dim] += occupy
@@ -891,12 +918,15 @@ def _simulate_reference(
         heapq.heappush(events, (new_end, next(seq), "free", (dim, svc.sid)))
         heapq.heappush(events, (new_end + a, next(seq), "done", (dim, svc.sid)))
         if penalty > 0:
-            # Re-arm latency: preempted chunks re-arrive after the penalty.
+            # Re-arm latency: preempted chunks re-arrive after the penalty
+            # (the arrival hook fires at their re-arm ready event).
             for t in cut:
                 push_ready(t, now + penalty)
         else:
             for t in cut:
                 queues[dim].append(t)
+                if on_enq is not None:
+                    on_enq(dim, t.tenant, now)
         arbiter.on_preempted(dim, cut, now)
 
     makespan = max(issue_times) if issue_times else 0.0
@@ -910,10 +940,16 @@ def _simulate_reference(
             if pending_since[task.dim] is None:
                 pending_since[task.dim] = now
             queues[task.dim].append(task)
+            if on_enq is not None:
+                on_enq(task.dim, task.tenant, now)
             if (arbiter is not None and getattr(arbiter, "preemption", False)
                     and busy_until[task.dim] > now):
                 maybe_preempt(task.dim, task, now)
             try_start(task.dim, now)
+            if chk and not use_enforced:
+                check_work_conserving(
+                    task.dim, now, len(queues[task.dim]),
+                    busy_until[task.dim], inflight[task.dim], "reference")
         elif kind == "free":
             dim, sid = payload  # type: ignore[misc]
             if sid not in services:
@@ -925,6 +961,10 @@ def _simulate_reference(
                 activity[dim].append((pending_since[dim], now))
                 pending_since[dim] = None
             try_start(dim, now)
+            if chk and not use_enforced:
+                check_work_conserving(dim, now, len(queues[dim]),
+                                      busy_until[dim], inflight[dim],
+                                      "reference")
         else:  # done — chunk's next stage becomes ready
             dim, sid = payload  # type: ignore[misc]
             svc = services.pop(sid, None)
@@ -959,6 +999,16 @@ def _simulate_reference(
             # Trailing compute nodes finish after the last network event.
             makespan = max(makespan, max(group_finish))
 
+    if chk:
+        check_final(
+            engine="reference", num_dims=num_dims,
+            tasks=((op, t.dim, t.wire_bytes, t.tenant)
+                   for op, t in tasks.items()),
+            dim_wire=dim_wire, dim_busy=dim_busy, dim_order=dim_order,
+            dim_services=dim_services, group_finish=group_finish,
+            resolved_issue=resolved_issue, makespan=makespan,
+            enforced=use_enforced, arbiter=arbiter, served_base=served_base)
+
     return SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
                      dim_services, resolved_issue, group_finish,
                      list(streams), list(tenants), group_wire)
@@ -986,6 +1036,7 @@ def _simulate_indexed(
     task_arrays: TaskArrays | None = None,
     deps: list[tuple[int, ...]] | None = None,
     dep_delay: list[float] | None = None,
+    chk: bool = False,
 ) -> SimResult:
     """Same semantics as :func:`_simulate_reference`, near-linear cost.
 
@@ -1055,6 +1106,11 @@ def _simulate_indexed(
     inflight: list[_Service | None] = [None] * num_dims
     events: list[tuple] = []
     dim_bw = tbl.bw
+
+    # Arrival hook (the fair-policy virtual-time clamp) + sanitizer baseline.
+    on_enq = getattr(arbiter, "on_enqueued", None)
+    served_base = (arbiter.served_snapshot()
+                   if chk and hasattr(arbiter, "served_snapshot") else None)
 
     # Ready-queue index, one flavor per mode:
     #  * plain: per-dim heap keyed by the intra discipline;
@@ -1142,7 +1198,7 @@ def _simulate_indexed(
         for hh in first_handles:
             push_ready(hh, issue_times[t_group[hh]])
 
-    def enqueue(hh: int) -> None:
+    def enqueue(hh: int, now: float) -> None:
         dim = t_dim[hh]
         qlen[dim] += 1
         if use_arbiter:
@@ -1155,6 +1211,8 @@ def _simulate_indexed(
                 heapq.heappush(heap, (t_wire[hh], t_arr[hh], hh))
             else:  # fifo / strict-priority order by arrival within a tenant
                 heapq.heappush(heap, (t_arr[hh], hh))
+            if on_enq is not None:
+                on_enq(dim, tn, now)
         elif use_enforced:
             ready_map[dim][(t_chunk[hh], t_stage[hh])] = hh
         elif scf:
@@ -1247,6 +1305,9 @@ def _simulate_indexed(
             occupy *= 1.0 + jitter * rng.random()
         if straggler[dim]:
             occupy *= rng.lognormvariate(0.0, straggler[dim])
+        if chk and dim_services[dim]:
+            check_service_start(dim, now, dim_services[dim][-1][1],
+                                "indexed")
         free_at = now + occupy
         busy_until[dim] = free_at
         dim_busy[dim] += occupy
@@ -1304,7 +1365,7 @@ def _simulate_indexed(
                 push_ready(hh, now + penalty)
         else:
             for hh in cut:
-                enqueue(hh)
+                enqueue(hh, now)
         arbiter.on_preempted(dim, [view(hh) for hh in cut], now)
 
     makespan = max(issue_times) if issue_times else 0.0
@@ -1317,10 +1378,13 @@ def _simulate_indexed(
             dim = t_dim[hh]
             if pending_since[dim] is None:
                 pending_since[dim] = now
-            enqueue(hh)
+            enqueue(hh, now)
             if use_arbiter and arb_preempt and busy_until[dim] > now:
                 maybe_preempt(dim, hh, now)
             try_start(dim, now)
+            if chk and not use_enforced:
+                check_work_conserving(dim, now, qlen[dim], busy_until[dim],
+                                      inflight[dim], "indexed")
         elif kind == 1:  # free
             dim, sid = payload
             if sid not in services:
@@ -1334,6 +1398,9 @@ def _simulate_indexed(
                 activity[dim].append((pending_since[dim], now))
                 pending_since[dim] = None
             try_start(dim, now)
+            if chk and not use_enforced:
+                check_work_conserving(dim, now, qlen[dim], busy_until[dim],
+                                      inflight[dim], "indexed")
         else:  # done — chunk's next stage becomes ready
             dim, sid = payload
             svc = services.pop(sid, None)
@@ -1371,6 +1438,15 @@ def _simulate_indexed(
 
     dim_order: list[list[OpId]] = [
         [op for ops in svc_ops[dim] for op in ops] for dim in range(num_dims)]
+    if chk:
+        check_final(
+            engine="indexed", num_dims=num_dims,
+            tasks=(((t_chunk[h], t_stage[h]), t_dim[h], t_wire[h],
+                    t_tenant[h]) for h in range(n_tasks)),
+            dim_wire=dim_wire, dim_busy=dim_busy, dim_order=dim_order,
+            dim_services=dim_services, group_finish=group_finish,
+            resolved_issue=resolved_issue, makespan=makespan,
+            enforced=use_enforced, arbiter=arbiter, served_base=served_base)
     return SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
                      dim_services, resolved_issue, group_finish,
                      list(streams), list(tenants), group_wire)
@@ -1387,6 +1463,7 @@ def simulate_scheduled(
     fusion: bool = True,
     water_filling: bool = False,
     engine: str = "indexed",
+    check_invariants: bool = False,
 ) -> tuple[SimResult, list[Chunk]]:
     """Schedule one collective with ``policy`` and simulate it."""
     from repro.core.scheduler import schedule_collective
@@ -1400,7 +1477,7 @@ def simulate_scheduled(
         water_filling=water_filling,
     )
     res = simulate(topology, [chunks], intra=intra, fusion=fusion,
-                   engine=engine)
+                   engine=engine, check_invariants=check_invariants)
     return res, chunks
 
 
@@ -1417,6 +1494,7 @@ def simulate_requests(
     preempt_penalty_s: float | None = None,
     engine: str = "indexed",
     scheduler=None,
+    check_invariants: bool = False,
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Online entry point: schedule and simulate an arrival-time-aware
     request stream.
@@ -1470,5 +1548,6 @@ def simulate_requests(
         arbiter=arbiter,
         preempt_penalty_s=preempt_penalty_s,
         engine=engine,
+        check_invariants=check_invariants,
     )
     return res, groups

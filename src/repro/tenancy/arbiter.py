@@ -26,6 +26,20 @@ the in-flight multi-chunk service at chunk granularity — chunks whose data
 has not started draining return to the queue (``on_preempted`` refunds
 their bytes), so a small latency-sensitive tenant never waits behind a
 1 GB collective's full service.
+
+Virtual-time staleness: a (dim, tenant) virtual time only advances while
+the tenant is served, so a tenant that goes idle keeps a *stale* clock —
+far behind tenants that kept consuming (it then monopolizes the dim on
+re-arrival to "catch up" on service it never queued for), or far ahead of
+a newcomer starting at 0 (it is then starved until the newcomer catches
+up).  The fix is the start-time-fair-queuing clamp (``vt_clamp``, default
+on): each dim tracks a virtual-time *floor* — the start tag of its most
+recent service — and an arriving task raises its tenant's virtual time to
+that floor (``on_enqueued``).  For continuously backlogged tenants the
+clamp is a no-op (a backlogged tenant's clock is never behind the start
+tag of a service that beat it), so only idle→busy transitions are
+affected.  ``repro.verify`` proves the bounded-slowdown property with the
+clamp on and extracts the monopolization counterexample with it off.
 """
 from __future__ import annotations
 
@@ -53,6 +67,10 @@ class FabricArbiter:
     seconds after the split (modeling the cost of tearing down and
     re-issuing the collective).  0.0 — the default, for backward
     compatibility — keeps splits free.
+
+    ``vt_clamp`` enables the fair-policy virtual-time floor clamp (see the
+    module docstring); turn it off only to reproduce the pre-fix staleness
+    behavior (the ``repro.verify`` counterexamples pin it).
     """
 
     def __init__(
@@ -64,6 +82,7 @@ class FabricArbiter:
         quantum_chunks: int = 8,
         isolated_latency: Mapping[str, float] | None = None,
         preempt_penalty_s: float = 0.0,
+        vt_clamp: bool = True,
     ):
         if policy not in ARBITER_POLICIES:
             raise ValueError(
@@ -78,12 +97,17 @@ class FabricArbiter:
         self.preemption = preemption and policy != "fifo"
         self.quantum_chunks = quantum_chunks
         self.preempt_penalty_s = preempt_penalty_s
+        self.vt_clamp = vt_clamp
         self.isolated_latency = dict(isolated_latency or {})
         self._served: dict[tuple[int, str], float] = {}  # (dim, tenant) -> bytes
         # Virtual time accrues *at service time* (bytes / weight-then), so a
         # later slo-aware weight boost rescales only future service, not the
         # tenant's whole served history.
         self._vt: dict[tuple[int, str], float] = {}
+        # Per-dim virtual-time floor: the start tag (pre-increment virtual
+        # time) of the dim's most recent service — the SFQ v(t) an arriving
+        # tenant's clock is clamped up to (see module docstring).
+        self._vt_floor: dict[int, float] = {}
         self._inflight_inc: dict[int, dict] = {}  # dim -> {op_id: vt inc}
         self._latency: dict[str, dict[int, float]] = {}  # tenant -> {group: s}
         self._lat_sum: dict[str, float] = {}  # running sum of _latency values
@@ -122,7 +146,30 @@ class FabricArbiter:
     def virtual_time(self, dim: int, tenant: str) -> float:
         return self._vt.get((dim, tenant), 0.0)
 
+    def vt_floor(self, dim: int) -> float:
+        """The dim's SFQ virtual clock: start tag of its latest service."""
+        return self._vt_floor.get(dim, 0.0)
+
     # -- simulator hooks -----------------------------------------------------
+    def on_enqueued(self, dim: int, tenant: str, now: float) -> None:
+        """A task of ``tenant`` joined ``dim``'s ready queue.
+
+        Fair policies clamp the tenant's virtual time up to the dim's floor
+        so an idle period neither banks catch-up credit (stale-low clock →
+        monopolization) nor penalizes the tenant against newcomers
+        (stale-high clock → starvation).  No-op for continuously backlogged
+        tenants — their clock is never below the floor (the simulator
+        always serves the minimum clock, so a backlogged tenant's clock is
+        at least the start tag of any service that beat it).
+        """
+        if not self.vt_clamp or self.policy in ("fifo", "strict-priority"):
+            return
+        floor = self._vt_floor.get(dim)
+        if floor is None:
+            return
+        key = (dim, tenant)
+        if self._vt.get(key, 0.0) < floor:
+            self._vt[key] = floor
     def order_key(self, task, dim: int, now: float):
         if self.policy == "fifo":
             return (task.arrival_seq,)
@@ -147,6 +194,11 @@ class FabricArbiter:
         return vt_cand < self.virtual_time(dim, running.tenant)
 
     def on_served(self, dim: int, batch, now: float) -> None:
+        # Advance the dim's virtual clock to this service's start tag (the
+        # served tenant's pre-increment virtual time) — monotone, because
+        # the simulator always serves the minimum clock and clamps only
+        # raise clocks toward the floor.
+        self._vt_floor[dim] = self._vt.get((dim, batch[0].tenant), 0.0)
         incs = self._inflight_inc[dim] = {}
         for t in batch:
             key = (dim, t.tenant)
@@ -173,10 +225,35 @@ class FabricArbiter:
                                  + latency - lats.get(group, 0.0))
         lats[group] = latency
 
-    # -- reporting -----------------------------------------------------------
+    # -- reporting / introspection -------------------------------------------
     @property
     def preempt_count(self) -> int:
         return self._preempt_count
 
     def served_bytes(self, tenant: str) -> float:
         return sum(v for (d, t), v in self._served.items() if t == tenant)
+
+    def served_snapshot(self) -> dict[tuple[int, str], float]:
+        """Copy of the per-(dim, tenant) served-bytes ledger.  The runtime
+        invariant sanitizer (``simulate(check_invariants=True)``) snapshots
+        this at simulation start and checks the per-dim served delta against
+        the engine's wire-byte accounting at the end."""
+        return dict(self._served)
+
+    def discipline_state(self) -> dict:
+        """Structured snapshot of the discipline's internal state — what the
+        SMT encoder (``repro.verify.encode``) mirrors and the sanitizer
+        cross-checks.  Keys are JSON-friendly (tuple keys stringified)."""
+        return {
+            "policy": self.policy,
+            "preemption": self.preemption,
+            "quantum_chunks": self.quantum_chunks,
+            "preempt_penalty_s": self.preempt_penalty_s,
+            "vt_clamp": self.vt_clamp,
+            "virtual_time": {f"{d}/{t}": v
+                             for (d, t), v in sorted(self._vt.items())},
+            "vt_floor": dict(sorted(self._vt_floor.items())),
+            "served_bytes": {f"{d}/{t}": v
+                             for (d, t), v in sorted(self._served.items())},
+            "preempt_count": self._preempt_count,
+        }

@@ -68,6 +68,7 @@ def simulate_fabric(
     fusion: bool = True,
     water_filling: bool = False,
     engine: str = "indexed",
+    check_invariants: bool = False,
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Schedule and simulate a multi-tenant stream on one shared fabric.
 
@@ -93,6 +94,7 @@ def simulate_fabric(
         streams=[r.stream for r in requests],
         arbiter=arbiter,
         engine=engine,
+        check_invariants=check_invariants,
     )
     return res, groups
 

@@ -89,6 +89,7 @@ def simulate_traffic(
     preempt_penalty_s: float | None = None,
     engine: str = "indexed",
     scheduler=None,
+    check_invariants: bool = False,
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Schedule and simulate a traffic graph — the dependency-aware
     counterpart of ``simulate_requests``.
@@ -108,5 +109,6 @@ def simulate_traffic(
     res = simulate(
         topology, groups, intra=intra, fusion=fusion, jitter=jitter,
         seed=seed, arbiter=arbiter, preempt_penalty_s=preempt_penalty_s,
-        engine=engine, **graph.sim_kwargs())
+        engine=engine, check_invariants=check_invariants,
+        **graph.sim_kwargs())
     return res, groups

@@ -1,0 +1,36 @@
+"""Formal verification of fabric-arbiter scheduling (ROADMAP: SMT item).
+
+Layout:
+
+  * :mod:`repro.verify.smt` — a small typed expression AST with two
+    backends: a pure-Python evaluator (always available) and an optional
+    z3 lowering (used when ``z3-solver`` is installed, e.g. in CI).
+  * :mod:`repro.verify.encode` — encodes a small fabric instance (2-3
+    tenants, 2 dims, a few chunks, one arbiter discipline) as constraints
+    over service start/finish/virtual-time variables mirroring the
+    engines' semantics, with the real engine's trace as the witness.
+  * :mod:`repro.verify.properties` — the theorems: starvation-freedom,
+    bounded slowdown, bytes-conservation, no-lost-chunks, and
+    work-conservation.
+  * :mod:`repro.verify.harness` — proves/refutes each property per
+    instance over the instance's free-variable grid, extracts
+    counterexamples as concrete :class:`CollectiveRequest` streams, and
+    replays them through ``simulate_requests`` on both engines.
+"""
+from repro.verify.encode import (  # noqa: F401
+    FabricInstance,
+    Encoding,
+    FreeVar,
+    TraceRecorder,
+    encode_assignment,
+    validate_encoding,
+)
+from repro.verify.harness import (  # noqa: F401
+    PropertyVerdict,
+    decide_property,
+    default_instances,
+    replay_counterexample,
+    verify_suite,
+)
+from repro.verify.properties import ALL_PROPERTIES, Property  # noqa: F401
+from repro.verify.smt import Expr, Var, solve_encoding, z3_available  # noqa: F401

@@ -1,0 +1,64 @@
+"""Tests for ``tools/lint_engine.py`` (engine-hygiene AST lint)."""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+LINT = REPO / "tools" / "lint_engine.py"
+
+sys.path.insert(0, str(REPO / "tools"))
+import lint_engine  # noqa: E402
+
+
+def _violations(tmp_path, src: str) -> list[str]:
+    f = tmp_path / "probe.py"
+    f.write_text(src)
+    return lint_engine.lint_file(f)
+
+
+def test_flags_float_equality(tmp_path):
+    out = _violations(tmp_path, "def f(x):\n    return x == 1.5\n")
+    assert len(out) == 1 and "float equality" in out[0]
+    # != and arithmetic/division operands count too
+    out = _violations(tmp_path, "def f(x, y):\n    return x / 2 != y\n")
+    assert len(out) == 1
+    out = _violations(tmp_path, "def f(x):\n    return float(x) == 0\n")
+    assert len(out) == 1
+
+
+def test_integer_and_ordered_comparisons_are_fine(tmp_path):
+    assert _violations(tmp_path, "def f(x):\n    return x == 3\n") == []
+    assert _violations(tmp_path, "def f(x):\n    return x <= 1.5\n") == []
+    assert _violations(tmp_path, "def f(x, y):\n    return x == y\n") == []
+
+
+def test_flags_wall_clock_reads(tmp_path):
+    src = ("import time\n"
+           "from time import perf_counter\n"
+           "def f():\n"
+           "    return time.time() + perf_counter() + monotonic()\n")
+    out = _violations(tmp_path, src)
+    assert len(out) == 4  # the from-import plus three call sites
+    assert any("perf_counter" in v for v in out)
+
+
+def test_lint_allow_escape(tmp_path):
+    src = ("def f(x):\n"
+           "    return x == 1.5  # lint: allow\n")
+    assert _violations(tmp_path, src) == []
+
+
+def test_engine_trees_are_clean():
+    """The real gate: the simulator and tenancy trees must pass."""
+    proc = subprocess.run(
+        [sys.executable, str(LINT)], capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_exits_nonzero_on_violation(tmp_path):
+    f = tmp_path / "bad.py"
+    f.write_text("import time\nx = time.time()\n")
+    proc = subprocess.run(
+        [sys.executable, str(LINT), str(f)], capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "wall-clock" in proc.stdout

@@ -1,0 +1,205 @@
+"""Tests for the SMT verification subsystem (``repro.verify``).
+
+Covers the expression layer, the encode/validate cross-check (engine
+witness vs declarative model), the prover verdicts over the default
+instance suite, counterexample replay on both engines, and the pinned
+solver-derived regression for the weighted-fair virtual-time staleness
+bug that ``FabricArbiter(vt_clamp=True)`` fixes.
+"""
+import pytest
+
+from repro.tenancy.arbiter import FabricArbiter
+from repro.tenancy.tenants import TenantSpec
+from repro.verify import (
+    ALL_PROPERTIES,
+    FabricInstance,
+    FreeVar,
+    decide_property,
+    default_instances,
+    encode_assignment,
+    replay_counterexample,
+    validate_encoding,
+    verify_suite,
+)
+from repro.verify import smt
+from repro.verify.encode import RequestTemplate
+from repro.verify.properties import bounded_slowdown
+from repro.verify.smt import Abs, And, Const, Implies, Max, Min, Not, Var
+
+MB = 1e6
+PROPS = {p.name: p for p in ALL_PROPERTIES}
+
+
+# ---------------------------------------------------------------------------
+# Expression layer
+# ---------------------------------------------------------------------------
+def test_smt_evaluate_arithmetic_and_logic():
+    env = {"x": 3.0, "y": -2.0}
+    e = (Var("x") * 2 + Var("y")) / 4
+    assert smt.evaluate(e, env) == pytest.approx(1.0)
+    assert smt.evaluate(Max(Var("x"), Var("y"), 5), env) == 5.0
+    assert smt.evaluate(Min(Var("x"), Var("y")), env) == -2.0
+    assert smt.evaluate(Abs(Var("y")), env) == 2.0
+    assert smt.evaluate(And(Var("x") > 0, Not(Var("y") > 0)), env)
+    assert smt.evaluate(Implies(Var("x") > 10, Var("y") > 0), env)
+    assert not smt.evaluate((Var("x")).eq(Var("y")), env)
+    assert smt.free_vars(e) == {"x", "y"}
+
+
+# ---------------------------------------------------------------------------
+# Encoding: the engine witness must satisfy the declarative model
+# ---------------------------------------------------------------------------
+def test_every_default_instance_encodes_and_validates():
+    insts = default_instances()
+    assert len(insts) >= 3
+    n_assignments = 0
+    for inst in insts:
+        for assignment in inst.assignments(quick=True):
+            enc = encode_assignment(inst, assignment)
+            validate_encoding(enc)  # model-vs-engine cross-check
+            n_assignments += 1
+            assert enc.constraints and enc.env
+            # every constraint variable is pinned by the witness
+            for c in enc.constraints:
+                assert smt.free_vars(c) <= set(enc.env)
+    assert n_assignments >= 6
+
+
+def test_encoding_is_engine_agnostic():
+    inst = default_instances()[0]
+    assignment = inst.assignments()[0]
+    e_ref = encode_assignment(inst, assignment, engine="reference")
+    e_idx = encode_assignment(inst, assignment, engine="indexed")
+    assert e_ref.result.diff_fields(e_idx.result) == []
+    assert e_ref.env == e_idx.env  # identical traces -> identical witness
+
+
+# ---------------------------------------------------------------------------
+# Prover verdicts over the default suite
+# ---------------------------------------------------------------------------
+def test_suite_decides_all_properties_with_expected_verdicts():
+    rep = verify_suite(quick=True)
+    assert rep["n_instances"] >= 3
+    assert len(rep["properties_decided"]) >= 4
+    verdicts = {(v["instance"], v["property"]): v for v in rep["verdicts"]}
+    # conservation / ordering / progress theorems hold everywhere
+    for (inst, prop), v in verdicts.items():
+        if prop in ("work_conservation", "bytes_conservation",
+                    "no_lost_chunks", "starvation_freedom"):
+            assert v["status"] == "proved", (inst, prop)
+    # the SFQ clamp is what makes weighted sharing hold across idle gaps
+    assert verdicts[("wf-rearrival-clamped", "bounded_slowdown")][
+        "status"] == "proved"
+    stale = verdicts[("wf-rearrival-stale", "bounded_slowdown")]
+    assert stale["status"] == "refuted" and stale["counterexamples"]
+    # fifo ignores weights: the weighted-share claim is refutable
+    fifo = verdicts[("fifo-mixed", "bounded_slowdown")]
+    assert fifo["status"] == "refuted"
+    # every refutation carried a successful dual-engine replay
+    for v in rep["verdicts"]:
+        if v["status"] == "refuted":
+            assert v["replays"], (v["instance"], v["property"])
+            for r in v["replays"]:
+                assert r["engines_bit_identical"]
+                assert r["violated_on"] == ["indexed", "reference"]
+                assert r["requests"]
+
+
+def test_replay_counterexample_rejects_non_violating_assignment():
+    insts = {i.name: i for i in default_instances()}
+    with pytest.raises(AssertionError, match="did not reproduce"):
+        replay_counterexample(
+            insts["wf-rearrival-clamped"], {"rearrive": 3e-4},
+            PROPS["bounded_slowdown"])
+
+
+# ---------------------------------------------------------------------------
+# The pinned solver-derived regression: weighted-fair vt staleness.
+#
+# The instance below is the exact counterexample the prover extracted from
+# ``wf-rearrival-stale`` (free variable rearrive = 6e-4): tenant ``a``
+# goes idle after one small request while ``b`` stays backlogged; when
+# ``a`` re-arrives, its stale (low) virtual clock lets it monopolize the
+# contended dim until the clock catches up.  ``vt_clamp=True`` (the fix,
+# and the FabricArbiter default) clamps the re-arriving clock up to the
+# dim's SFQ floor, restoring weight-proportional sharing.  Pinned as a
+# permanent regression test independent of the default instance suite.
+# ---------------------------------------------------------------------------
+def _staleness_instance(vt_clamp: bool) -> FabricInstance:
+    reqs = [RequestTemplate("a", 1 * MB, 0.0)]
+    reqs += [RequestTemplate("b", 4 * MB, i * 1e-6) for i in range(8)]
+    reqs += [RequestTemplate("a", 4 * MB, ("rearrive", i * 1e-6))
+             for i in range(4)]
+    return FabricInstance(
+        name=f"pinned-vt-staleness-{'fixed' if vt_clamp else 'bug'}",
+        tenants=(TenantSpec("a", weight=1.0), TenantSpec("b", weight=1.0)),
+        requests=tuple(reqs),
+        policy="weighted-fair",
+        quantum_chunks=2,
+        preemption=True,
+        vt_clamp=vt_clamp,
+        chunks_per_collective=2,
+        free=(FreeVar("rearrive", (6e-4,)),),
+        slowdown_window_start="rearrive",
+        contended_dim=0,
+        slowdown_slack_quanta=2.0,
+    )
+
+
+def test_vt_staleness_counterexample_is_pinned():
+    cex = {"rearrive": 6e-4}
+    # without the clamp the property is violated, identically on BOTH
+    # engines (replay_counterexample asserts bit-equivalence internally)
+    replay = replay_counterexample(
+        _staleness_instance(vt_clamp=False), cex, PROPS["bounded_slowdown"])
+    assert replay["violated_on"] == ["indexed", "reference"]
+    # with the clamp the same workload satisfies bounded slowdown
+    for eng in ("reference", "indexed"):
+        enc = encode_assignment(_staleness_instance(vt_clamp=True), cex,
+                                engine=eng)
+        validate_encoding(enc)
+        assert smt.evaluate(bounded_slowdown(enc), enc.env)
+
+
+def test_vt_clamp_hooks_and_snapshot():
+    specs = [TenantSpec("a"), TenantSpec("b")]
+    arb = FabricArbiter("weighted-fair", specs)
+    assert arb.vt_clamp  # the fix is the default
+
+    class _T:
+        def __init__(self, tenant, wire):
+            self.tenant, self.wire_bytes = tenant, wire
+            self.fixed_delay, self.op_id = 0.0, (0, 0)
+
+    arb.on_served(0, [_T("b", 10.0)], now=0.0)          # floor -> 0, vt_b=10
+    arb.on_served(0, [_T("b", 10.0)], now=1.0)          # floor -> 10, vt_b=20
+    arb.on_enqueued(0, "a", now=2.0)                    # a re-arrives stale
+    assert arb.virtual_time(0, "a") == pytest.approx(arb.vt_floor(0))
+    assert arb.vt_floor(0) == pytest.approx(10.0)
+    snap = arb.served_snapshot()
+    assert snap[(0, "b")] == pytest.approx(20.0)
+    # clamp off: the stale clock is left behind the floor
+    arb2 = FabricArbiter("weighted-fair", specs, vt_clamp=False)
+    arb2.on_served(0, [_T("b", 10.0)], now=0.0)
+    arb2.on_served(0, [_T("b", 10.0)], now=1.0)
+    arb2.on_enqueued(0, "a", now=2.0)
+    assert arb2.virtual_time(0, "a") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Optional z3 backend: must agree with the native witness decision
+# ---------------------------------------------------------------------------
+def test_z3_backend_agrees_with_native_when_installed():
+    pytest.importorskip("z3")
+    insts = {i.name: i for i in default_instances()}
+    for name, prop, want in (
+            ("wf-rearrival-clamped", "bounded_slowdown", "proved"),
+            ("wf-rearrival-stale", "bounded_slowdown", "refuted"),
+            ("sp-preempt", "starvation_freedom", "proved")):
+        v_native = decide_property(insts[name], PROPS[prop], quick=True,
+                                   backend="native", replay=False)
+        v_z3 = decide_property(insts[name], PROPS[prop], quick=True,
+                               backend="z3", replay=False)
+        assert v_native.status == want
+        assert v_z3.status == want
+        assert "z3" in v_z3.backends

@@ -1,0 +1,132 @@
+#!/usr/bin/env python
+"""Engine-hygiene lint for the simulator hot paths.
+
+Walks ``src/repro/core/`` and ``src/repro/tenancy/`` ASTs and rejects two
+classes of constructs that have no business in deterministic, replayable
+engine code:
+
+  * **float equality** — ``==`` / ``!=`` where an operand is visibly a
+    float: a float literal, a ``float(...)`` call, or arithmetic that
+    produces one (any expression containing a division or a float
+    literal).  Bit-equivalence between the engines is proved by comparing
+    *accumulation order*, not by tolerant comparison — ad-hoc float
+    equality in the engines is either a latent flake or a tolerance that
+    hides accounting bugs (see ``repro.core.invariants``).
+  * **wall-clock reads** — ``time.time()``, ``perf_counter()``,
+    ``monotonic()``, ``datetime.now()`` and friends.  Simulated time is
+    the only clock the engines may observe; a wall-clock read makes runs
+    unreproducible and breaks the verify witness replay.
+
+A line ending in a ``# lint: allow`` comment is exempt (used where the
+construct is deliberate and documented, e.g. the exact-compare in the SMT
+evaluator's mirror in invariants).
+
+Usage: ``python tools/lint_engine.py [paths...]`` — defaults to the two
+engine trees; exits 1 and prints ``file:line: message`` per violation.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+DEFAULT_PATHS = ("src/repro/core", "src/repro/tenancy")
+
+WALL_CLOCK_ATTRS = {
+    "time": {"time", "time_ns", "perf_counter", "perf_counter_ns",
+             "monotonic", "monotonic_ns", "process_time", "clock"},
+    "datetime": {"now", "utcnow", "today"},
+}
+WALL_CLOCK_NAMES = (WALL_CLOCK_ATTRS["time"]
+                    | WALL_CLOCK_ATTRS["datetime"]) - {"time"}
+
+
+def _is_floatish(node: ast.expr) -> bool:
+    """Is this expression visibly float-valued?  (Conservative: names and
+    attribute loads are opaque — only literals, ``float()`` casts, and
+    arithmetic that contains a division or float literal count.)"""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, float)
+    if isinstance(node, ast.Call):
+        return isinstance(node.func, ast.Name) and node.func.id == "float"
+    if isinstance(node, ast.BinOp):
+        if isinstance(node.op, ast.Div):
+            return True
+        return _is_floatish(node.left) or _is_floatish(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _is_floatish(node.operand)
+    return False
+
+
+def _allowed(line: str) -> bool:
+    return "lint: allow" in line
+
+
+def lint_file(path: Path) -> list[str]:
+    src = path.read_text()
+    lines = src.splitlines()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:  # pragma: no cover - the test suite would fail first
+        return [f"{path}:{e.lineno}: syntax error: {e.msg}"]
+    try:
+        rel = path.relative_to(REPO)
+    except ValueError:  # outside the repo (e.g. a test's tmp file)
+        rel = path
+    out: list[str] = []
+
+    def report(node: ast.AST, msg: str) -> None:
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        if not _allowed(line):
+            out.append(f"{rel}:{node.lineno}: {msg}")
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Compare):
+            operands = [node.left, *node.comparators]
+            for op in node.ops:
+                if isinstance(op, (ast.Eq, ast.NotEq)) and any(
+                        _is_floatish(o) for o in operands):
+                    report(node, "float equality comparison "
+                           "(use an ordered check or an explicit tolerance)")
+                    break
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and f.attr in WALL_CLOCK_ATTRS.get(f.value.id, ())):
+                report(node, f"wall-clock read {f.value.id}.{f.attr}() "
+                       "(engines may only observe simulated time)")
+            elif isinstance(f, ast.Name) and f.id in WALL_CLOCK_NAMES:
+                report(node, f"wall-clock read {f.id}() "
+                       "(engines may only observe simulated time)")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module in ("time", "datetime"):
+                bad = [a.name for a in node.names
+                       if a.name in WALL_CLOCK_ATTRS[node.module]]
+                if bad:
+                    report(node, f"imports wall-clock {bad} from "
+                           f"{node.module} (engines may only observe "
+                           "simulated time)")
+    return out
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or [str(REPO / p) for p in DEFAULT_PATHS]
+    violations: list[str] = []
+    n_files = 0
+    for p in paths:
+        root = Path(p)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            n_files += 1
+            violations.extend(lint_file(f))
+    for v in violations:
+        print(v)
+    print(f"lint_engine: {n_files} files, {len(violations)} violation(s)",
+          file=sys.stderr)
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
