@@ -1,0 +1,308 @@
+"""Observability study: the flight recorder must be free when off and
+faithful when on.
+
+Three parts, all emitted into ``BENCH_obs.json``:
+
+  * **bit-identity gate** — the same pinned scenario matrix as
+    ``sched_perf`` (scheduling policies x intra disciplines x arbiter
+    policies x topologies, both engines), each scenario simulated twice:
+    untraced and with a :class:`repro.obs.Tracer` armed.  Every
+    ``SimResult`` field must be **bit-identical** — tracer hooks are
+    append-only observers and may never perturb the event loop (no extra
+    ``seq`` draws, no RNG consumption).  Any mismatch raises.
+  * **fidelity gate** — per scenario, the trace must reproduce the
+    engine's own bookkeeping: ``Tracer.service_wire()`` vs
+    ``SimResult.dim_wire_bytes``, ``Tracer.service_busy()`` vs
+    ``dim_busy``, ``ops_served`` vs ``dim_op_order`` (exact), and
+    ``BwTimeline`` utilizations vs ``avg_bw_utilization`` /
+    ``activity_rate``.  Wire/busy checks use ``math.isclose`` at
+    ``rel_tol=1e-12``: preemption amends a service record with one fused
+    ``(w - cut)`` subtraction where the engine does ``+= w`` then
+    ``-= cut``, so the sums agree to ulps, not bits.  The windowed
+    ``BwTimeline.per_dim_utilization`` series must also integrate back to
+    the aggregate per-dim utilization, and the Chrome ``trace_event``
+    export must round-trip through :func:`repro.obs.parse_chrome_trace`
+    with event counts matching the ``SimResult`` bookkeeping.
+  * **overhead gate** — the long AR stream (``sched_perf``'s headline
+    shape) timed untraced vs traced on the indexed engine; best-of-N with
+    re-measure retries (wall-clock on shared runners is noisy), asserting
+    traced <= 1.10x untraced.  "Zero overhead when disabled" is the lint
+    rule (``tools/lint_engine.py``: every tracer call in an engine hot
+    loop sits behind a guard branch); this gate bounds the *enabled* cost.
+
+Run standalone (``python -m benchmarks.obs_study [--quick]``) or via
+``python -m benchmarks.run obs``.  Also writes ``obs_sample.trace.json``
+— a Perfetto-loadable sample trace from the arbiter scenario.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+from benchmarks.common import row, timed_best
+from repro.core.requests import CollectiveRequest
+from repro.core.simulator import simulate_requests
+from repro.obs import BwTimeline, Tracer, parse_chrome_trace
+from repro.tenancy import (
+    FabricArbiter,
+    TenantSpec,
+    simulate_fabric,
+    synthetic_requests,
+)
+from repro.topology import make_table2_topologies
+
+MB = 1e6
+OUT_JSON = Path(__file__).resolve().parents[1] / "BENCH_obs.json"
+OUT_TRACE = Path(__file__).resolve().parents[1] / "obs_sample.trace.json"
+OVERHEAD_LIMIT = 1.10
+
+
+def _assert_bit_identical(res_plain, res_traced, label: str) -> None:
+    bad = res_traced.diff_fields(res_plain)
+    if bad:
+        raise AssertionError(
+            f"tracing perturbed the simulation on {label}: fields {bad} "
+            f"differ between traced and untraced runs")
+
+
+def _isclose(a: float, b: float) -> bool:
+    return math.isclose(a, b, rel_tol=1e-12, abs_tol=1e-12)
+
+
+def _check_fidelity(trc: Tracer, res, topo, label: str) -> None:
+    """Trace-derived aggregates must match the engine's own bookkeeping."""
+    wire = trc.service_wire()
+    busy = trc.service_busy()
+    for d in range(topo.num_dims):
+        if not _isclose(wire[d], res.dim_wire_bytes[d]):
+            raise AssertionError(
+                f"{label}: dim{d} trace wire {wire[d]!r} != engine "
+                f"{res.dim_wire_bytes[d]!r}")
+        if not _isclose(busy[d], res.dim_busy[d]):
+            raise AssertionError(
+                f"{label}: dim{d} trace busy {busy[d]!r} != engine "
+                f"{res.dim_busy[d]!r}")
+        if trc.ops_served(d) != res.dim_op_order[d]:
+            raise AssertionError(
+                f"{label}: dim{d} trace op order diverges from engine")
+
+    tl = BwTimeline.from_tracer(trc)
+    if not _isclose(tl.avg_bw_utilization(), res.avg_bw_utilization(topo)):
+        raise AssertionError(
+            f"{label}: timeline avg_bw_utilization "
+            f"{tl.avg_bw_utilization()!r} != SimResult "
+            f"{res.avg_bw_utilization(topo)!r}")
+    for d in range(topo.num_dims):
+        if not _isclose(tl.activity_rate(d), res.activity_rate(d)):
+            raise AssertionError(
+                f"{label}: dim{d} timeline activity_rate != SimResult")
+
+    # Windowed series must integrate back to the aggregate utilization.
+    if res.makespan > 0:
+        win = res.makespan / 7.0
+        per_dim = tl.per_dim_utilization(win)
+        wins = tl.windows(win)
+        for d in range(topo.num_dims):
+            integ = sum(u * (w1 - w0)
+                        for u, (w0, w1) in zip(per_dim[d], wins))
+            want = tl.dim_utilization(d) * res.makespan
+            if not math.isclose(integ, want, rel_tol=1e-9, abs_tol=1e-12):
+                raise AssertionError(
+                    f"{label}: dim{d} windowed utilization integrates to "
+                    f"{integ!r}, aggregate says {want!r}")
+
+    # Chrome export must round-trip with counts matching the bookkeeping.
+    parsed = parse_chrome_trace(trc.to_chrome_trace())
+    n_groups = len(res.group_finish)
+    if parsed["groups"] != n_groups:
+        raise AssertionError(
+            f"{label}: trace export has {parsed['groups']} group events, "
+            f"SimResult finished {n_groups} groups")
+    for d in range(topo.num_dims):
+        if parsed["services_per_dim"].get(d, 0) != len(res.dim_services[d]):
+            raise AssertionError(
+                f"{label}: trace export dim{d} service count "
+                f"{parsed['services_per_dim'].get(d, 0)} != "
+                f"{len(res.dim_services[d])}")
+    if parsed["preempts"] != len(trc.preempts):
+        raise AssertionError(f"{label}: preempt instants lost in export")
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity + fidelity gate (sched_perf's scenario matrix, traced)
+# ---------------------------------------------------------------------------
+def tracing_gate(topos, quick: bool) -> list[str]:
+    checked: list[str] = []
+    topo_names = ("2D-SW_SW", "3D-SW_SW_SW_hetero")
+    policies = ("baseline", "themis") if quick else (
+        "baseline", "themis", "themis_indep_ag", "lookahead",
+        "themis_guarded")
+
+    for tname in topo_names:
+        topo = topos[tname]
+        for policy in policies:
+            for intra in ("SCF", "FIFO"):
+                reqs = [CollectiveRequest(["AR", "RS", "AG"][i % 3],
+                                          (4 + 9 * (i % 4)) * MB,
+                                          issue_time=i * 1.3e-4,
+                                          priority=i % 2)
+                        for i in range(18)]
+                for eng in ("indexed", "reference"):
+                    rp, _ = simulate_requests(topo, reqs, policy=policy,
+                                              chunks_per_collective=8,
+                                              intra=intra, engine=eng)
+                    trc = Tracer()
+                    rt, _ = simulate_requests(topo, reqs, policy=policy,
+                                              chunks_per_collective=8,
+                                              intra=intra, engine=eng,
+                                              tracer=trc)
+                    label = f"{tname}/{policy}/{intra}/{eng}"
+                    _assert_bit_identical(rp, rt, label)
+                    _check_fidelity(trc, rt, topo, label)
+                checked.append(f"{tname}/{policy}/{intra}")
+        # arbiter policies (multi-tenant engine, incl. preemption)
+        specs = [TenantSpec("heavy", weight=1.0),
+                 TenantSpec("light", weight=1.0, priority=1,
+                            slo_slowdown=1.5)]
+        reqs = (synthetic_requests("heavy", "AR", 200 * MB, 2)
+                + synthetic_requests("light", "AR", 8 * MB, 6,
+                                     gap_s=0.0004, start_s=0.0002))
+        for arb_policy in ("fifo", "strict-priority", "weighted-fair",
+                           "slo-aware"):
+            for eng in ("indexed", "reference"):
+                arb = FabricArbiter(arb_policy, specs,
+                                    isolated_latency={"light": 0.001})
+                rp, _ = simulate_fabric(topo, reqs, arbiter=arb,
+                                        chunks_per_collective=8, engine=eng)
+                arb = FabricArbiter(arb_policy, specs,
+                                    isolated_latency={"light": 0.001})
+                trc = Tracer()
+                rt, _ = simulate_fabric(topo, reqs, arbiter=arb,
+                                        chunks_per_collective=8, engine=eng,
+                                        tracer=trc)
+                label = f"{tname}/arbiter:{arb_policy}/{eng}"
+                _assert_bit_identical(rp, rt, label)
+                _check_fidelity(trc, rt, topo, label)
+            checked.append(f"{tname}/arbiter:{arb_policy}")
+    return checked
+
+
+# ---------------------------------------------------------------------------
+# Sample trace for the artifact upload (Perfetto-loadable)
+# ---------------------------------------------------------------------------
+def write_sample_trace(topos) -> dict:
+    topo = topos["2D-SW_SW"]
+    specs = [TenantSpec("heavy", weight=1.0),
+             TenantSpec("light", weight=1.0, priority=1, slo_slowdown=1.5)]
+    reqs = (synthetic_requests("heavy", "AR", 200 * MB, 2)
+            + synthetic_requests("light", "AR", 8 * MB, 6,
+                                 gap_s=0.0004, start_s=0.0002))
+    arb = FabricArbiter("weighted-fair", specs,
+                        isolated_latency={"light": 0.001})
+    trc = Tracer()
+    res, _ = simulate_fabric(topo, reqs, arbiter=arb,
+                             chunks_per_collective=8, tracer=trc)
+    trc.save(OUT_TRACE)
+    return {
+        "path": OUT_TRACE.name,
+        "scenario": "2D-SW_SW/arbiter:weighted-fair",
+        "events": trc.event_counts(),
+        "makespan_s": res.makespan,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Overhead gate: traced vs untraced on the long stream
+# ---------------------------------------------------------------------------
+def overhead(topos, quick: bool) -> dict:
+    n_req, n_chunk = (64, 16) if quick else (256, 64)
+    topo = topos["3D-SW_SW_SW_homo"]
+    reqs = [CollectiveRequest("AR", 20.0 * MB, issue_time=i * 1e-4)
+            for i in range(n_req)]
+
+    def run_plain():
+        return simulate_requests(topo, reqs, chunks_per_collective=n_chunk,
+                                 engine="indexed")
+
+    def run_traced():
+        trc = Tracer()
+        out = simulate_requests(topo, reqs, chunks_per_collective=n_chunk,
+                                engine="indexed", tracer=trc)
+        return out, trc
+
+    ratio = float("inf")
+    t_plain = t_traced = float("inf")
+    attempts = 0
+    # Re-measure on a miss, keeping the best-of-all-attempts wall time on
+    # each side: sub-second wall times on shared runners see scheduler
+    # noise well above the 10% budget we are gating, and the minimum is
+    # the noise-robust estimator (same rationale as ``timed_best``).
+    for attempts in range(1, 6):
+        (res_plain, _), tp = timed_best(run_plain, repeat=3)
+        ((res_traced, _), trc), tt = timed_best(run_traced, repeat=3)
+        t_plain = min(t_plain, tp)
+        t_traced = min(t_traced, tt)
+        ratio = t_traced / t_plain
+        if ratio <= OVERHEAD_LIMIT:
+            break
+    _assert_bit_identical(res_plain, res_traced,
+                          f"overhead {n_req}x{n_chunk}")
+    _check_fidelity(trc, res_traced, topo, f"overhead {n_req}x{n_chunk}")
+    if ratio > OVERHEAD_LIMIT:
+        raise AssertionError(
+            f"tracing overhead {ratio:.3f}x > {OVERHEAD_LIMIT}x on "
+            f"{n_req}x{n_chunk} stream after {attempts} attempts")
+    return {
+        "n_requests": n_req,
+        "chunks_per_collective": n_chunk,
+        "untraced_s": t_plain,
+        "traced_s": t_traced,
+        "overhead_x": ratio,
+        "attempts": attempts,
+        "events": trc.event_counts(),
+    }
+
+
+def run(quick: bool = False):
+    topos = make_table2_topologies()
+    report: dict = {"mode": "quick" if quick else "full",
+                    "overhead_limit_x": OVERHEAD_LIMIT}
+    rows = []
+
+    checked = tracing_gate(topos, quick)
+    report["tracing"] = {"scenarios": checked, "ok": True}
+    rows.append(row("obs/tracing", 0.0,
+                    f"{len(checked)} scenarios bit-identical+faithful "
+                    f"(both engines)"))
+
+    sample = write_sample_trace(topos)
+    report["sample_trace"] = sample
+    rows.append(row("obs/sample_trace", 0.0,
+                    f"{sample['path']} services="
+                    f"{sample['events'].get('services', 0)} "
+                    f"preempts={sample['events'].get('preempts', 0)}"))
+
+    oh = overhead(topos, quick)
+    report["overhead"] = oh
+    rows.append(row(
+        f"obs/overhead/{oh['n_requests']}x{oh['chunks_per_collective']}",
+        oh["traced_s"] * 1e6,
+        f"overhead={oh['overhead_x']:.3f}x "
+        f"plain={oh['untraced_s']:.4f}s traced={oh['traced_s']:.4f}s"))
+
+    OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
+    rows.append(row("obs/json", 0.0, f"json={OUT_JSON.name}"))
+    return rows
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv[1:]
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=quick):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,12 @@ paper reports (speedups, utilizations, roofline terms).
 cumulative-time hotspots after the CSV — the profile-then-vectorize
 workflow: find the hot loop before optimizing it (see ``repro.core.batch``
 for the pass that came out of it).
+
+``--trace`` installs the process-global observability registry
+(``repro.obs.enable_global``) before the studies run and prints its
+counters, span timers, and scheduler decision-log size afterwards — the
+flight-recorder view of what the schedulers actually did (memo-cache
+hit rates, schedule-pass / task-build wall time).
 """
 import sys
 
@@ -22,6 +28,7 @@ def main() -> None:
         fig11_utilization,
         fig12_workloads,
         insights_study,
+        obs_study,
         overlap_study,
         roofline_table,
         sched_perf,
@@ -41,6 +48,7 @@ def main() -> None:
         ("overlap", overlap_study),
         ("tenancy", tenancy_study),
         ("sched_perf", sched_perf),
+        ("obs", obs_study),
         ("topo_search", topo_search),
         ("traffic", traffic_study),
         ("verify", verify_study),
@@ -52,13 +60,16 @@ def main() -> None:
     import inspect
 
     flags = [a for a in sys.argv[1:] if a.startswith("--")]
-    unknown = [f for f in flags if f not in ("--profile", "--quick")]
+    unknown = [f for f in flags if f not in ("--profile", "--quick",
+                                             "--trace")]
     if unknown:
         raise SystemExit(
-            f"unknown flag(s) {unknown}; supported: --profile, --quick")
+            f"unknown flag(s) {unknown}; supported: --profile, --quick, "
+            f"--trace")
     args = [a for a in sys.argv[1:] if not a.startswith("--")]
     profile = "--profile" in flags
     quick = "--quick" in flags
+    trace = "--trace" in flags
     only = args[0] if args else None
 
     def run_selected() -> None:
@@ -74,6 +85,12 @@ def main() -> None:
             else:
                 print_rows(mod.run())
 
+    registry = None
+    if trace:
+        from repro.obs import enable_global
+
+        registry = enable_global()
+
     if profile:
         import cProfile
         import pstats
@@ -86,6 +103,14 @@ def main() -> None:
         pstats.Stats(prof).sort_stats("cumulative").print_stats(20)
     else:
         run_selected()
+
+    if registry is not None:
+        from repro.obs import disable_global
+
+        print("\n# --trace: scheduler metrics (repro.obs.MetricsRegistry)")
+        for line in registry.report_rows():
+            print(line)
+        disable_global()
 
 
 if __name__ == "__main__":

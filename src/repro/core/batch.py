@@ -41,6 +41,7 @@ training ones.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from dataclasses import dataclass
 from typing import Any, Callable, Iterable, Sequence
 
@@ -50,6 +51,7 @@ from repro.core.chunking import Chunk, schedule_classes
 from repro.core.latency_model import LatencyModel
 from repro.core.requests import CollectiveRequest
 from repro.core.scheduler import ThemisScheduler
+from repro.obs.metrics import current_registry
 from repro.core.simulator import (
     SimResult,
     TaskArrays,
@@ -75,6 +77,12 @@ class Scenario:
     order and the vectorized task build is reused unchanged, while
     dependency resolution stays in the per-scenario event loop
     (``simulate(deps=...)``).
+
+    ``tracer_factory`` (not an instance — one :class:`repro.obs.Tracer`
+    records exactly one run) arms the flight recorder on this scenario's
+    simulation; retrieve the armed tracers via the factory's own records
+    (e.g. ``lambda: traces.append(Tracer()) or traces[-1]``) or a closure
+    per scenario.
     """
 
     topology: Topology
@@ -91,6 +99,7 @@ class Scenario:
     preempt_penalty_s: float | None = None
     label: str = ""
     traffic: Any | None = None   # repro.traffic.TrafficGraph
+    tracer_factory: Callable[[], Any] | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "requests", tuple(self.requests))
@@ -192,8 +201,11 @@ class BatchCaches:
         tenants: list[str],
     ) -> TaskArrays:
         lm = LatencyModel.for_topology(topology)
-        return build_task_arrays_vectorized(lm, chunk_groups, priorities,
-                                            tenants, self._class_vectors)
+        reg = current_registry()
+        with (reg.span("batch.build_task_arrays") if reg is not None
+                else nullcontext()):
+            return build_task_arrays_vectorized(lm, chunk_groups, priorities,
+                                                tenants, self._class_vectors)
 
 
 def _factor_key(tbl) -> tuple:
@@ -347,6 +359,7 @@ def build_task_arrays_vectorized(
 def _run_scenario(sc: Scenario, groups: list[list[Chunk]],
                   ta: TaskArrays) -> SimResult:
     arb = sc.arbiter_factory() if sc.arbiter_factory is not None else None
+    trc = sc.tracer_factory() if sc.tracer_factory is not None else None
     if sc.traffic is not None:
         kw = sc.traffic.sim_kwargs()
     else:
@@ -360,7 +373,7 @@ def _run_scenario(sc: Scenario, groups: list[list[Chunk]],
         intra=sc.intra, fusion=sc.fusion, fusion_limit=sc.fusion_limit,
         jitter=sc.jitter, seed=sc.seed,
         arbiter=arb, preempt_penalty_s=sc.preempt_penalty_s,
-        engine="indexed", task_arrays=ta, **kw)
+        engine="indexed", task_arrays=ta, tracer=trc, **kw)
 
 
 def simulate_batch(

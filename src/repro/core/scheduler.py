@@ -36,6 +36,7 @@ from repro.core.chunking import Chunk, coalesce_by_order, split_equal
 from repro.core.latency_model import LatencyModel, StageOp
 from repro.core.load_tracker import DimLoadTracker
 from repro.core.requests import CollectiveRequest
+from repro.obs.metrics import ScheduleDecision, current_registry
 from repro.topology import Phase, Topology
 
 POLICIES = ("baseline", "themis", "themis_indep_ag", "lookahead",
@@ -72,11 +73,19 @@ class ThemisScheduler:
     (``repro.tenancy``) gives every tenant's scheduler the same fabric-wide
     tracker so each tenant's chunk orders steer around *other tenants'*
     residual loads, not just their own.
+
+    ``metrics`` (a :class:`repro.obs.MetricsRegistry`) turns on decision
+    logging, memo-cache hit/miss counters and span timers; ``None``
+    (default) adopts the process-global registry if one is installed
+    (``repro.obs.enable_global``, the ``benchmarks/run.py --trace`` path)
+    and otherwise disables instrumentation — every call site is guarded,
+    so the off path costs one branch per event.
     """
 
     latency_model: LatencyModel
     policy: str = "themis"
     tracker: DimLoadTracker | None = None
+    metrics: object | None = None
 
     # Caches are bounded: equal-size chunk runs produce a handful of distinct
     # (size, schedule) pairs, but adversarial streams with many distinct
@@ -88,6 +97,12 @@ class ThemisScheduler:
             raise ValueError(f"unknown policy {self.policy!r}; want {POLICIES}")
         if self.tracker is None:
             self.tracker = DimLoadTracker(self.latency_model)
+        if self.metrics is None:
+            self.metrics = current_registry()
+        # Last greedy decision's memo signature / hit flag, captured only
+        # while a registry is installed (feeds the per-request decision log).
+        self._last_sig: tuple = ()
+        self._last_hit = False
         # (chunk_bytes, schedule) -> dense per-dim load delta.  Exact: the
         # delta a schedule adds is independent of the current loads.
         self._delta_cache: dict[tuple, list[float]] = {}
@@ -102,6 +117,10 @@ class ThemisScheduler:
         """Per-dim load vector one chunk adds via ``sched`` (memoized)."""
         key = (chunk_bytes, tuple(sched))
         got = self._delta_cache.get(key)
+        reg = self.metrics
+        if reg is not None:
+            reg.inc("scheduler.delta_cache.hit" if got is not None
+                    else "scheduler.delta_cache.miss")
         if got is None:
             if len(self._delta_cache) >= self._CACHE_CAP:
                 self._delta_cache.clear()
@@ -169,10 +188,16 @@ class ThemisScheduler:
         """
         if collective not in ("AR", "RS", "AG"):
             raise ValueError(f"unsupported collective {collective}")
-        self.tracker.reset(collective)
-        return self._split_and_schedule(
-            collective, collective_bytes, chunks_per_collective,
-            water_filling=water_filling)
+        reg = self.metrics
+        with (reg.span("scheduler.schedule_pass") if reg is not None
+                else contextlib.nullcontext()):
+            self.tracker.reset(collective)
+            chunks = self._split_and_schedule(
+                collective, collective_bytes, chunks_per_collective,
+                water_filling=water_filling)
+        if reg is not None:
+            reg.inc("scheduler.collectives_scheduled")
+        return chunks
 
     def schedule_request(
         self,
@@ -190,11 +215,26 @@ class ThemisScheduler:
         issued mid-backprop sees the residual contention of every collective
         still in flight and is steered around it.
         """
-        self.tracker.advance_to(request.issue_time)
-        self.tracker.begin_collective(request.collective)
-        return self._split_and_schedule(
-            request.collective, request.size_bytes, chunks_per_collective,
-            water_filling=water_filling)
+        reg = self.metrics
+        with (reg.span("scheduler.schedule_pass") if reg is not None
+                else contextlib.nullcontext()):
+            self.tracker.advance_to(request.issue_time)
+            self.tracker.begin_collective(request.collective)
+            chunks = self._split_and_schedule(
+                request.collective, request.size_bytes,
+                chunks_per_collective, water_filling=water_filling)
+        if reg is not None:
+            reg.inc("scheduler.requests_scheduled")
+            reg.log_decision(ScheduleDecision(
+                collective=request.collective,
+                tenant=request.tenant,
+                policy=self.policy,
+                chunk_order=(tuple(dim for _, dim in chunks[0].schedule)
+                             if chunks else ()),
+                rank_signature=self._last_sig,
+                cache_hit=self._last_hit,
+                num_chunks=len(chunks)))
+        return chunks
 
     def _split_and_schedule(
         self,
@@ -278,6 +318,12 @@ class ThemisScheduler:
         else:  # RS and AR need the ascending permutation only
             sig = (collective, False, tuple(_sorted_dims(loads, descending=False)))
         got = self._greedy_cache.get(sig)
+        reg = self.metrics
+        if reg is not None:
+            reg.inc("scheduler.greedy_cache.hit" if got is not None
+                    else "scheduler.greedy_cache.miss")
+            self._last_sig = sig
+            self._last_hit = got is not None
         if got is None:
             if below:
                 sched = baseline_order(d, collective)

@@ -72,7 +72,9 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from contextlib import nullcontext
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 from repro.core.chunking import Chunk
 from repro.core.invariants import (
@@ -82,12 +84,29 @@ from repro.core.invariants import (
 )
 from repro.core.latency_model import LatencyModel
 from repro.core.requests import CollectiveRequest
+from repro.obs.metrics import current_registry
 from repro.topology import Phase, Topology
 
 OpId = tuple[int, int]  # (chunk_id, stage_idx)
 
-# One served batch on a dimension: (start, end, group ids carried).
-ServiceInterval = tuple[float, float, tuple[int, ...]]
+
+class ServiceInterval(NamedTuple):
+    """One served batch on a dimension.
+
+    A NamedTuple so equality, unpacking, and indexing behave exactly like
+    the bare ``(start, end, groups)`` tuple it replaces — existing
+    ``for start, end, groups in dim_services[k]`` loops and tuple-literal
+    comparisons keep working unchanged.
+    """
+
+    start: float
+    end: float
+    groups: tuple[int, ...]
+
+    @property
+    def op(self) -> tuple[int, ...]:
+        """Group ids this service carried (alias of ``groups``)."""
+        return self.groups
 
 ENGINES = ("indexed", "reference")
 
@@ -178,9 +197,13 @@ class SimResult:
     group_wire_bytes: list[float] = field(default_factory=list)
 
     def avg_bw_utilization(self, topology: Topology) -> float:
-        """Weighted average BW utilization (weights = per-dim BW budget)."""
+        """Weighted average BW utilization (weights = per-dim BW budget).
+
+        An empty/zero-makespan run moved no bytes over no time — that is
+        zero utilization, not perfect utilization.
+        """
         if self.makespan <= 0:
-            return 1.0
+            return 0.0
         total_bw = topology.total_bw_bytes
         moved = sum(self.dim_wire_bytes)
         return moved / (self.makespan * total_bw)
@@ -498,6 +521,7 @@ def simulate(
     deps: list[tuple[int, ...]] | None = None,
     dep_delay_s: list[float] | None = None,
     check_invariants: bool = False,
+    tracer=None,
 ) -> SimResult:
     """Simulate one or more collectives (``chunk_groups``).
 
@@ -560,6 +584,15 @@ def simulate(
         fine.  Violations raise
         :class:`repro.core.invariants.InvariantViolation`.  Off (default)
         costs one branch per event.
+    ``tracer``: arm the flight recorder (:class:`repro.obs.Tracer`) inside
+        either engine.  Records every service start/finish/preempt, ready-
+        queue arrival, arbiter grant, dependency-edge resolution and group
+        release; export via ``tracer.to_chrome_trace()`` or derive
+        timelines with ``repro.obs.BwTimeline.from_tracer``.  Hooks are
+        append-only (no tie-break/RNG consumption), so a traced run's
+        result is bit-identical to the untraced run; off (default) costs
+        one branch per event, same contract as ``check_invariants``.  One
+        tracer records exactly one run.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; want {ENGINES}")
@@ -622,21 +655,28 @@ def simulate(
             task_arrays._validated_groups = chunk_groups
     penalty = _resolve_penalty(preempt_penalty_s, arbiter)
 
+    # Span timing lives behind the metrics registry (repro.obs); core never
+    # reads the wall clock itself.  No registry installed -> nullcontext.
+    reg = current_registry()
     if engine == "indexed" and (arbiter is None or _arbiter_indexable(arbiter)):
-        return _simulate_indexed(
+        with reg.span("simulate.indexed") if reg is not None \
+                else nullcontext():
+            return _simulate_indexed(
+                topology, chunk_groups, issue_times=issue_times,
+                priorities=priorities, intra=intra, fusion=fusion,
+                fusion_limit=fusion_limit, enforced_order=enforced_order,
+                jitter=jitter, seed=seed, tenants=tenants, streams=streams,
+                arbiter=arbiter, penalty=penalty, task_arrays=task_arrays,
+                deps=deps, dep_delay=dep_delay_s, chk=check_invariants,
+                tracer=tracer)
+    with reg.span("simulate.reference") if reg is not None else nullcontext():
+        return _simulate_reference(
             topology, chunk_groups, issue_times=issue_times,
             priorities=priorities, intra=intra, fusion=fusion,
             fusion_limit=fusion_limit, enforced_order=enforced_order,
             jitter=jitter, seed=seed, tenants=tenants, streams=streams,
-            arbiter=arbiter, penalty=penalty, task_arrays=task_arrays,
-            deps=deps, dep_delay=dep_delay_s, chk=check_invariants)
-    return _simulate_reference(
-        topology, chunk_groups, issue_times=issue_times,
-        priorities=priorities, intra=intra, fusion=fusion,
-        fusion_limit=fusion_limit, enforced_order=enforced_order,
-        jitter=jitter, seed=seed, tenants=tenants, streams=streams,
-        arbiter=arbiter, penalty=penalty, deps=deps, dep_delay=dep_delay_s,
-        chk=check_invariants)
+            arbiter=arbiter, penalty=penalty, deps=deps,
+            dep_delay=dep_delay_s, chk=check_invariants, tracer=tracer)
 
 
 # ---------------------------------------------------------------------------
@@ -661,6 +701,7 @@ def _simulate_reference(
     deps: list[tuple[int, ...]] | None = None,
     dep_delay: list[float] | None = None,
     chk: bool = False,
+    tracer=None,
 ) -> SimResult:
     import random
 
@@ -668,6 +709,14 @@ def _simulate_reference(
     lm = LatencyModel.for_topology(topology)
     num_dims = topology.num_dims
     n_groups = len(chunk_groups)
+
+    # Flight recorder (repro.obs.Tracer).  Hooks are append-only and never
+    # consume seq/RNG, so armed runs stay bit-identical to untraced ones.
+    trc = tracer
+    if trc is not None:
+        trc.begin(num_dims, n_groups, "reference")
+    trc_enq = trc.enq_dims.append if trc is not None else None
+    trc_enq_t = trc.enq_times.append if trc is not None else None
 
     tasks: dict[OpId, StageTask] = {}
     group_of_chunk: dict[int, int] = {}
@@ -746,6 +795,8 @@ def _simulate_reference(
             while work:
                 gg, tt = work.pop(0)
                 for c in dep_children[gg]:
+                    if trc is not None:
+                        trc.dep_resolved(gg, c, tt)
                     if parent_fin[c] < tt:
                         parent_fin[c] = tt
                     n_parents[c] -= 1
@@ -753,6 +804,8 @@ def _simulate_reference(
                         continue
                     te = max(issue_times[c], parent_fin[c] + dep_delay[c])
                     resolved_issue[c] = te
+                    if trc is not None:
+                        trc.release(c, te)
                     if chains_left[c]:
                         for task in group_roots[c]:
                             push_ready(task, te)
@@ -765,6 +818,8 @@ def _simulate_reference(
                 continue
             te = issue_times[g] + dep_delay[g]
             resolved_issue[g] = te
+            if trc is not None:
+                trc.release(g, te)
             if chains_left[g]:
                 for task in group_roots[g]:
                     push_ready(task, te)
@@ -869,8 +924,14 @@ def _simulate_reference(
             sid=next(seq), dim=dim, start=now, end=free_at,
             rate=(wire / occupy) if occupy > 0 else float("inf"),
             batch=batch, svc_idx=len(dim_services[dim]))
-        dim_services[dim].append(
-            (now, free_at, tuple(sorted({t.group for t in batch}))))
+        groups_served = tuple(sorted({t.group for t in batch}))
+        dim_services[dim].append(ServiceInterval(now, free_at, groups_served))
+        if trc is not None:
+            trc.service_start(dim, now, free_at,
+                              tuple(t.op_id for t in batch), groups_served,
+                              batch[0].tenant, wire)
+            if arbiter is not None:
+                trc.grant(dim, now, batch[0].tenant, len(batch), wire)
         services[svc.sid] = svc
         inflight[dim] = svc
         if arbiter is not None:
@@ -901,14 +962,19 @@ def _simulate_reference(
         if not cut:
             return
         new_end = svc.start + acc / svc.rate
+        cut_wire = sum(t.wire_bytes for t in cut)
         dim_busy[dim] -= svc.end - new_end
-        dim_wire[dim] -= sum(t.wire_bytes for t in cut)
+        dim_wire[dim] -= cut_wire
         busy_until[dim] = new_end
         cut_ids = {t.op_id for t in cut}
         dim_order[dim] = [o for o in dim_order[dim] if o not in cut_ids]
         s0 = dim_services[dim][svc.svc_idx][0]
-        dim_services[dim][svc.svc_idx] = (
+        dim_services[dim][svc.svc_idx] = ServiceInterval(
             s0, new_end, tuple(sorted({t.group for t in keep})))
+        if trc is not None:
+            trc.service_preempt(dim, svc.svc_idx, now, new_end, len(keep),
+                                tuple(t.op_id for t in cut), cut_wire,
+                                penalty)
         services.pop(svc.sid)
         svc.sid = next(seq)
         svc.end = new_end
@@ -925,6 +991,9 @@ def _simulate_reference(
         else:
             for t in cut:
                 queues[dim].append(t)
+                if trc_enq is not None:
+                    trc_enq(dim)
+                    trc_enq_t(now)
                 if on_enq is not None:
                     on_enq(dim, t.tenant, now)
         arbiter.on_preempted(dim, cut, now)
@@ -940,6 +1009,9 @@ def _simulate_reference(
             if pending_since[task.dim] is None:
                 pending_since[task.dim] = now
             queues[task.dim].append(task)
+            if trc_enq is not None:
+                trc_enq(task.dim)
+                trc_enq_t(now)
             if on_enq is not None:
                 on_enq(task.dim, task.tenant, now)
             if (arbiter is not None and getattr(arbiter, "preemption", False)
@@ -1009,9 +1081,12 @@ def _simulate_reference(
             resolved_issue=resolved_issue, makespan=makespan,
             enforced=use_enforced, arbiter=arbiter, served_base=served_base)
 
-    return SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
-                     dim_services, resolved_issue, group_finish,
-                     list(streams), list(tenants), group_wire)
+    res = SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
+                    dim_services, resolved_issue, group_finish,
+                    list(streams), list(tenants), group_wire)
+    if trc is not None:
+        trc.finalize(res, topology)
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -1037,6 +1112,7 @@ def _simulate_indexed(
     deps: list[tuple[int, ...]] | None = None,
     dep_delay: list[float] | None = None,
     chk: bool = False,
+    tracer=None,
 ) -> SimResult:
     """Same semantics as :func:`_simulate_reference`, near-linear cost.
 
@@ -1112,6 +1188,14 @@ def _simulate_indexed(
     served_base = (arbiter.served_snapshot()
                    if chk and hasattr(arbiter, "served_snapshot") else None)
 
+    # Flight recorder (repro.obs.Tracer).  Hooks are append-only and never
+    # consume seq/RNG, so armed runs stay bit-identical to untraced ones.
+    trc = tracer
+    if trc is not None:
+        trc.begin(num_dims, n_groups, "indexed")
+    trc_enq = trc.enq_dims.append if trc is not None else None
+    trc_enq_t = trc.enq_times.append if trc is not None else None
+
     # Ready-queue index, one flavor per mode:
     #  * plain: per-dim heap keyed by the intra discipline;
     #  * arbiter: per-(dim, tenant) bucket heaps (quantum batching / preempt
@@ -1169,6 +1253,8 @@ def _simulate_indexed(
             while work:
                 gg, tt = work.pop(0)
                 for c in dep_children[gg]:
+                    if trc is not None:
+                        trc.dep_resolved(gg, c, tt)
                     if parent_fin[c] < tt:
                         parent_fin[c] = tt
                     n_parents[c] -= 1
@@ -1176,6 +1262,8 @@ def _simulate_indexed(
                         continue
                     te = max(issue_times[c], parent_fin[c] + dep_delay[c])
                     resolved_issue[c] = te
+                    if trc is not None:
+                        trc.release(c, te)
                     if chains_left[c]:
                         for hh in group_first[c]:
                             push_ready(hh, te)
@@ -1188,6 +1276,8 @@ def _simulate_indexed(
                 continue
             te = issue_times[g] + dep_delay[g]
             resolved_issue[g] = te
+            if trc is not None:
+                trc.release(g, te)
             if chains_left[g]:
                 for hh in group_first[g]:
                     push_ready(hh, te)
@@ -1201,6 +1291,9 @@ def _simulate_indexed(
     def enqueue(hh: int, now: float) -> None:
         dim = t_dim[hh]
         qlen[dim] += 1
+        if trc_enq is not None:
+            trc_enq(dim)
+            trc_enq_t(now)
         if use_arbiter:
             b = buckets[dim]
             tn = t_tenant[hh]
@@ -1312,13 +1405,22 @@ def _simulate_indexed(
         busy_until[dim] = free_at
         dim_busy[dim] += occupy
         dim_wire[dim] += wire
-        svc_ops[dim].append([(t_chunk[hh], t_stage[hh]) for hh in batch])
+        ops = [(t_chunk[hh], t_stage[hh]) for hh in batch]
+        svc_ops[dim].append(ops)
         svc = _Service(
             sid=next(seq), dim=dim, start=now, end=free_at,
             rate=(wire / occupy) if occupy > 0 else float("inf"),
             batch=batch, svc_idx=len(dim_services[dim]))
-        dim_services[dim].append(
-            (now, free_at, tuple(sorted({t_group[hh] for hh in batch}))))
+        groups_served = tuple(sorted({t_group[hh] for hh in batch}))
+        dim_services[dim].append(ServiceInterval(now, free_at, groups_served))
+        if trc is not None:
+            # Share the engine's own op list — preemption replaces (never
+            # mutates) the ``svc_ops`` entry, so the tracer's reference
+            # stays a faithful snapshot without a per-service copy.
+            trc.service_start(dim, now, free_at, ops, groups_served,
+                              t_tenant[batch[0]], wire)
+            if use_arbiter:
+                trc.grant(dim, now, t_tenant[batch[0]], len(batch), wire)
         services[svc.sid] = svc
         inflight[dim] = svc
         if use_arbiter:
@@ -1344,14 +1446,19 @@ def _simulate_indexed(
         if not cut:
             return
         new_end = svc.start + acc / svc.rate
+        cut_wire = sum(t_wire[hh] for hh in cut)
         dim_busy[dim] -= svc.end - new_end
-        dim_wire[dim] -= sum(t_wire[hh] for hh in cut)
+        dim_wire[dim] -= cut_wire
         busy_until[dim] = new_end
         svc_ops[dim][svc.svc_idx] = [(t_chunk[hh], t_stage[hh])
                                      for hh in keep]
         s0 = dim_services[dim][svc.svc_idx][0]
-        dim_services[dim][svc.svc_idx] = (
+        dim_services[dim][svc.svc_idx] = ServiceInterval(
             s0, new_end, tuple(sorted({t_group[hh] for hh in keep})))
+        if trc is not None:
+            trc.service_preempt(dim, svc.svc_idx, now, new_end, len(keep),
+                                tuple((t_chunk[hh], t_stage[hh])
+                                      for hh in cut), cut_wire, penalty)
         services.pop(svc.sid)
         svc.sid = next(seq)
         svc.end = new_end
@@ -1447,9 +1554,12 @@ def _simulate_indexed(
             dim_services=dim_services, group_finish=group_finish,
             resolved_issue=resolved_issue, makespan=makespan,
             enforced=use_enforced, arbiter=arbiter, served_base=served_base)
-    return SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
-                     dim_services, resolved_issue, group_finish,
-                     list(streams), list(tenants), group_wire)
+    res = SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
+                    dim_services, resolved_issue, group_finish,
+                    list(streams), list(tenants), group_wire)
+    if trc is not None:
+        trc.finalize(res, topology)
+    return res
 
 
 def simulate_scheduled(
@@ -1464,6 +1574,7 @@ def simulate_scheduled(
     water_filling: bool = False,
     engine: str = "indexed",
     check_invariants: bool = False,
+    tracer=None,
 ) -> tuple[SimResult, list[Chunk]]:
     """Schedule one collective with ``policy`` and simulate it."""
     from repro.core.scheduler import schedule_collective
@@ -1477,7 +1588,8 @@ def simulate_scheduled(
         water_filling=water_filling,
     )
     res = simulate(topology, [chunks], intra=intra, fusion=fusion,
-                   engine=engine, check_invariants=check_invariants)
+                   engine=engine, check_invariants=check_invariants,
+                   tracer=tracer)
     return res, chunks
 
 
@@ -1495,6 +1607,7 @@ def simulate_requests(
     engine: str = "indexed",
     scheduler=None,
     check_invariants: bool = False,
+    tracer=None,
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Online entry point: schedule and simulate an arrival-time-aware
     request stream.
@@ -1549,5 +1662,6 @@ def simulate_requests(
         preempt_penalty_s=preempt_penalty_s,
         engine=engine,
         check_invariants=check_invariants,
+        tracer=tracer,
     )
     return res, groups

@@ -69,6 +69,7 @@ def simulate_fabric(
     water_filling: bool = False,
     engine: str = "indexed",
     check_invariants: bool = False,
+    tracer=None,
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Schedule and simulate a multi-tenant stream on one shared fabric.
 
@@ -78,6 +79,9 @@ def simulate_fabric(
     policy arbitrates between them.  Its ``preempt_penalty_s`` sets the
     re-arm latency preempted chunks pay before requeueing.  ``engine``
     selects the simulator engine (see :func:`repro.core.simulator.simulate`).
+    ``tracer`` arms the flight recorder (:class:`repro.obs.Tracer`) on the
+    joint simulation — tenant lanes in the exported trace come from the
+    request tags.
     """
     groups = schedule_tenant_requests(
         topology, requests, policy=policy, shared_tracker=shared_tracker,
@@ -95,6 +99,7 @@ def simulate_fabric(
         arbiter=arbiter,
         engine=engine,
         check_invariants=check_invariants,
+        tracer=tracer,
     )
     return res, groups
 

@@ -90,9 +90,14 @@ def simulate_traffic(
     engine: str = "indexed",
     scheduler=None,
     check_invariants: bool = False,
+    tracer=None,
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Schedule and simulate a traffic graph — the dependency-aware
     counterpart of ``simulate_requests``.
+
+    ``tracer`` arms the flight recorder (:class:`repro.obs.Tracer`); on a
+    dependency-gated graph the exported Chrome trace carries flow arrows
+    for every resolved dependency edge.
 
     The returned ``SimResult`` is indexed like ``graph.nodes``:
     ``group_issue`` holds each node's *resolved* issue time, so
@@ -109,6 +114,6 @@ def simulate_traffic(
     res = simulate(
         topology, groups, intra=intra, fusion=fusion, jitter=jitter,
         seed=seed, arbiter=arbiter, preempt_penalty_s=preempt_penalty_s,
-        engine=engine, check_invariants=check_invariants,
+        engine=engine, check_invariants=check_invariants, tracer=tracer,
         **graph.sim_kwargs())
     return res, groups

@@ -607,3 +607,165 @@ def test_indexed_engine_scales_near_linearly():
     assert t_big / t_small <= 6.0, (
         f"4x stage-ops cost {t_big / t_small:.1f}x wall time "
         f"({t_small * 1e3:.1f}ms -> {t_big * 1e3:.1f}ms)")
+
+
+# ---------------------------------------------------------------------------
+# Observability: an armed flight recorder must not perturb the simulation
+# ---------------------------------------------------------------------------
+def _assert_trace_faithful(trc, res, topo):
+    """The trace must reproduce the engine's own bookkeeping.  Wire/busy
+    use isclose: preemption amends a trace record with one fused
+    ``(w - cut)`` subtraction where the engine does ``+= w`` then
+    ``-= cut``, so sums agree to ulps, not bits."""
+    wire = trc.service_wire()
+    busy = trc.service_busy()
+    for d in range(topo.num_dims):
+        assert wire[d] == pytest.approx(res.dim_wire_bytes[d],
+                                        rel=1e-12, abs=1e-12)
+        assert busy[d] == pytest.approx(res.dim_busy[d],
+                                        rel=1e-12, abs=1e-12)
+        assert trc.ops_served(d) == res.dim_op_order[d]
+        assert len(trc.services[d]) == len(res.dim_services[d])
+
+
+@pytest.mark.parametrize("policy", ("baseline", "themis"))
+def test_tracing_is_bit_identical_across_engines(policy):
+    from repro.obs import Tracer
+
+    rng = random.Random(700 + len(policy))
+    for tname in ("2D-SW_SW", "3D-SW_SW_SW_hetero"):
+        topo = TOPOS[tname]
+        reqs = _rand_requests(rng, 12)
+        for eng in ("indexed", "reference"):
+            for intra in ("SCF", "FIFO"):
+                kw = dict(policy=policy, chunks_per_collective=8,
+                          intra=intra, engine=eng)
+                plain, _ = simulate_requests(topo, reqs, **kw)
+                trc = Tracer()
+                traced, _ = simulate_requests(topo, reqs, tracer=trc, **kw)
+                assert_same(plain, traced)
+                assert trc.engine == eng and trc.finished
+                _assert_trace_faithful(trc, traced, topo)
+
+
+@pytest.mark.parametrize("arb_policy", ARB_POLICIES)
+def test_tracing_is_bit_identical_under_arbiters(arb_policy):
+    """Arbiter scenarios exercise the preemption amend path and grant
+    events; traced runs must still match untraced bit-for-bit on both
+    engines, and the two engines' traces must tell the same story."""
+    from repro.obs import Tracer
+
+    rng = random.Random(800 + ARB_POLICIES.index(arb_policy))
+    specs = [TenantSpec("a", weight=2.0),
+             TenantSpec("b", weight=1.0, priority=1, slo_slowdown=1.5)]
+    topo = TOPOS["2D-SW_SW"]
+    reqs = _rand_requests(rng, 14, tenants=("a", "b"))
+    traces = {}
+    for eng in ("indexed", "reference"):
+        kw = dict(chunks_per_collective=8, engine=eng)
+        arb = FabricArbiter(arb_policy, specs, isolated_latency={"b": 0.001})
+        plain, _ = simulate_fabric(topo, reqs, arbiter=arb, **kw)
+        arb = FabricArbiter(arb_policy, specs, isolated_latency={"b": 0.001})
+        trc = Tracer()
+        traced, _ = simulate_fabric(topo, reqs, arbiter=arb, tracer=trc, **kw)
+        assert_same(plain, traced)
+        _assert_trace_faithful(trc, traced, topo)
+        # one grant per service start while an arbiter is installed
+        assert len(trc.grants) == sum(len(s) for s in trc.services)
+        traces[eng] = trc
+    for field in ("grants", "preempts", "enqueues", "releases"):
+        assert getattr(traces["indexed"], field) == pytest.approx(
+            getattr(traces["reference"], field))
+
+
+def test_tracing_on_dependency_graphs_records_edges_and_releases():
+    from repro.obs import Tracer
+    from repro.traffic import simulate_traffic
+
+    rng = random.Random(900)
+    topo = TOPOS["3D-SW_SW_SW_hetero"]
+    graph = _rand_graph(rng, 14)
+    n_edges = sum(len(n.deps) for n in graph.nodes)
+    for eng in ("indexed", "reference"):
+        kw = dict(chunks_per_collective=6, engine=eng)
+        plain, _ = simulate_traffic(topo, graph, **kw)
+        trc = Tracer()
+        traced, _ = simulate_traffic(topo, graph, tracer=trc, **kw)
+        assert_same(plain, traced)
+        assert len(trc.dep_edges) == n_edges
+        # every node (request or compute) is released exactly once
+        assert sorted(g for g, _ in trc.releases) == list(
+            range(len(graph.nodes)))
+        _assert_trace_faithful(trc, traced, topo)
+
+
+def test_trace_schema_round_trips_through_chrome_export(tmp_path):
+    """Export -> JSON file -> parse: event counts must match the
+    recording SimResult's bookkeeping."""
+    from repro.obs import Tracer, parse_chrome_trace
+    from repro.traffic import simulate_traffic
+
+    rng = random.Random(910)
+    topo = TOPOS["2D-SW_SW"]
+    graph = _rand_graph(rng, 12, tenants=("a", "b"))
+    specs = [TenantSpec("a", weight=2.0), TenantSpec("b")]
+    arb = FabricArbiter("weighted-fair", specs, quantum_chunks=4)
+    trc = Tracer()
+    res, _ = simulate_traffic(topo, graph, chunks_per_collective=6,
+                              arbiter=arb, tracer=trc, engine="indexed")
+    path = tmp_path / "run.trace.json"
+    trc.save(path)
+    parsed = parse_chrome_trace(path)
+    assert parsed == parse_chrome_trace(trc.to_chrome_trace())
+    assert parsed["groups"] == len(res.group_finish)
+    assert parsed["dims"] == topo.num_dims
+    for d in range(topo.num_dims):
+        assert parsed["services_per_dim"][d] == len(res.dim_services[d])
+    assert parsed["grants"] == len(trc.grants)
+    assert parsed["preempts"] == len(trc.preempts)
+    assert parsed["flows"] == len(trc.dep_edges)
+
+
+def test_tracer_refuses_reuse_and_unfinished_export():
+    from repro.obs import BwTimeline, Tracer
+
+    trc = Tracer()
+    reqs = [CollectiveRequest("AR", 4 * MB)]
+    simulate_requests(TOPOS["2D-SW_SW"], reqs, chunks_per_collective=4,
+                      tracer=trc)
+    with pytest.raises(RuntimeError, match="one Tracer records one"):
+        simulate_requests(TOPOS["2D-SW_SW"], reqs, chunks_per_collective=4,
+                          tracer=trc)
+    fresh = Tracer()
+    with pytest.raises(RuntimeError, match="finished run"):
+        fresh.to_chrome_trace()
+    with pytest.raises(ValueError, match="finished run"):
+        BwTimeline.from_tracer(fresh)
+
+
+def test_batch_tracer_factory_arms_one_tracer_per_scenario():
+    from repro.obs import Tracer
+
+    rng = random.Random(920)
+    reqs = tuple(_rand_requests(rng, 8))
+    tracers = []
+
+    def factory():
+        t = Tracer()
+        tracers.append(t)
+        return t
+
+    scenarios = [
+        Scenario(TOPOS[tname], reqs, chunks_per_collective=6,
+                 tracer_factory=factory)
+        for tname in ("2D-SW_SW", "3D-SW_SW_SW_hetero")
+    ]
+    results = simulate_batch(scenarios)
+    plain = simulate_batch([
+        Scenario(TOPOS[tname], reqs, chunks_per_collective=6)
+        for tname in ("2D-SW_SW", "3D-SW_SW_SW_hetero")])
+    assert len(tracers) == 2
+    for res, ref, trc, sc in zip(results, plain, tracers, scenarios):
+        assert_same(res, ref)
+        assert trc.finished
+        _assert_trace_faithful(trc, res, sc.topology)

@@ -62,3 +62,46 @@ def test_cli_exits_nonzero_on_violation(tmp_path):
         [sys.executable, str(LINT), str(f)], capture_output=True, text=True)
     assert proc.returncode == 1
     assert "wall-clock" in proc.stdout
+
+
+def test_flags_unguarded_tracer_calls(tmp_path):
+    out = _violations(tmp_path, "def f(trc, dim, now):\n"
+                                "    trc.service_start(dim, now)\n")
+    assert len(out) == 1 and "unguarded tracer call" in out[0]
+    out = _violations(tmp_path, "def f(trc_enq, dim):\n"
+                                "    trc_enq(dim)\n")
+    assert len(out) == 1 and "'trc_enq'" in out[0]
+    out = _violations(tmp_path, "def f(tracer):\n"
+                                "    tracer.enq_dims.append(0)\n")
+    assert len(out) == 1
+
+
+def test_guarded_tracer_calls_are_fine(tmp_path):
+    src = ("def f(trc, trc_enq, trc_enq_t, dim, now):\n"
+           "    if trc is not None:\n"
+           "        trc.service_start(dim, now)\n"
+           "    if trc_enq is not None:\n"
+           "        trc_enq(dim)\n"
+           "        trc_enq_t(now)\n")  # sibling alias shares the branch
+    assert _violations(tmp_path, src) == []
+    # conditional-expression guards count too (the pre-bind idiom)
+    src = ("def f(trc):\n"
+           "    trc_enq = trc.enq_dims.append if trc is not None else None\n")
+    assert _violations(tmp_path, src) == []
+    # non-tracer names are not subject to the rule
+    assert _violations(tmp_path, "def f(track):\n    track.emit(1)\n") == []
+
+
+def test_tracer_guard_does_not_leak_outside_branch(tmp_path):
+    src = ("def f(trc, dim):\n"
+           "    if trc is not None:\n"
+           "        pass\n"
+           "    trc.grant(dim)\n")  # after the branch: unguarded again
+    out = _violations(tmp_path, src)
+    assert len(out) == 1 and out[0].endswith("branch)")
+
+
+def test_tracer_rule_honors_lint_allow(tmp_path):
+    src = ("def f(trc, dim):\n"
+           "    trc.grant(dim)  # lint: allow\n")
+    assert _violations(tmp_path, src) == []

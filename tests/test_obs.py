@@ -1,0 +1,249 @@
+"""Unit tests for the observability layer (``repro.obs``): flight-recorder
+timelines, windowed share/queue series, the metrics registry + scheduler
+decision log, and the satellite fixes that rode along (typed
+``ServiceInterval``, empty-run ``avg_bw_utilization``)."""
+import math
+
+import pytest
+
+from repro.core.requests import CollectiveRequest
+from repro.core.scheduler import ThemisScheduler
+from repro.core.latency_model import LatencyModel
+from repro.core.simulator import ServiceInterval, SimResult, simulate_requests
+from repro.obs import (
+    BwTimeline,
+    MetricsRegistry,
+    Tracer,
+    current_registry,
+    disable_global,
+    enable_global,
+)
+from repro.tenancy import (
+    FabricArbiter,
+    TenantSpec,
+    simulate_fabric,
+    synthetic_requests,
+)
+from repro.topology import make_table2_topologies
+
+TOPOS = make_table2_topologies()
+MB = 1e6
+
+
+def _traced_arbiter_run(topo_name="2D-SW_SW"):
+    """A multi-tenant run with real contention (and preemption) to derive
+    timelines from."""
+    topo = TOPOS[topo_name]
+    specs = [TenantSpec("heavy", weight=1.0),
+             TenantSpec("light", weight=1.0, priority=1, slo_slowdown=1.5)]
+    reqs = (synthetic_requests("heavy", "AR", 200 * MB, 2)
+            + synthetic_requests("light", "AR", 8 * MB, 6,
+                                 gap_s=0.0004, start_s=0.0002))
+    arb = FabricArbiter("weighted-fair", specs,
+                        isolated_latency={"light": 0.001})
+    trc = Tracer()
+    res, _ = simulate_fabric(topo, reqs, arbiter=arb,
+                             chunks_per_collective=8, tracer=trc)
+    return topo, res, trc
+
+
+# ---------------------------------------------------------------------------
+# Satellite fixes: ServiceInterval type + empty-run utilization
+# ---------------------------------------------------------------------------
+def test_service_interval_is_tuple_compatible():
+    si = ServiceInterval(1.0, 2.0, (3,))
+    assert si == (1.0, 2.0, (3,))          # equality with the old bare tuple
+    s, e, g = si                            # unpacking still works
+    assert (s, e, g) == (1.0, 2.0, (3,))
+    assert si[1] == si.end == 2.0           # index and field access agree
+    assert si.start == 1.0 and si.groups == (3,)
+    assert si.op == (3,)                    # historical alias for the payload
+
+
+def test_engine_emits_typed_service_intervals():
+    res, _ = simulate_requests(TOPOS["2D-SW_SW"],
+                               [CollectiveRequest("AR", 8 * MB)],
+                               chunks_per_collective=4)
+    for per_dim in res.dim_services:
+        for si in per_dim:
+            assert isinstance(si, ServiceInterval)
+            assert si.end >= si.start
+
+
+def test_avg_bw_utilization_is_zero_for_empty_runs():
+    empty = SimResult(makespan=0.0, dim_busy=[0.0, 0.0],
+                      dim_wire_bytes=[0.0, 0.0], dim_activity=[[], []],
+                      dim_op_order=[[], []])
+    assert empty.avg_bw_utilization(TOPOS["2D-SW_SW"]) == 0.0
+    # and through the public entry point with an empty stream
+    res, groups = simulate_requests(TOPOS["2D-SW_SW"], [],
+                                    chunks_per_collective=4)
+    assert groups == [] and res.makespan == 0.0
+    assert res.avg_bw_utilization(TOPOS["2D-SW_SW"]) == 0.0
+    assert BwTimeline.from_result(res, TOPOS["2D-SW_SW"]) \
+        .avg_bw_utilization() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# BwTimeline: aggregate fidelity + windowed series
+# ---------------------------------------------------------------------------
+def test_timeline_from_result_matches_simresult_expressions():
+    topo = TOPOS["3D-SW_SW_SW_homo"]
+    reqs = [CollectiveRequest("AR", 50 * MB, issue_time=i * 1e-4)
+            for i in range(6)]
+    res, _ = simulate_requests(topo, reqs, chunks_per_collective=8)
+    tl = BwTimeline.from_result(res, topo)
+    assert tl.avg_bw_utilization() == res.avg_bw_utilization(topo)
+    for d in range(topo.num_dims):
+        assert tl.activity_rate(d) == res.activity_rate(d)
+    with pytest.raises(ValueError, match="from_tracer"):
+        tl.per_dim_utilization(tl.makespan / 4)  # needs service events
+
+
+def test_windowed_utilization_integrates_to_aggregate():
+    topo, res, trc = _traced_arbiter_run()
+    tl = BwTimeline.from_tracer(trc)
+    assert tl.avg_bw_utilization() == pytest.approx(
+        res.avg_bw_utilization(topo), rel=1e-12)
+    for n_win in (1, 3, 10):
+        win = res.makespan / n_win
+        wins = tl.windows(win)
+        per_dim = tl.per_dim_utilization(win)
+        for d in range(topo.num_dims):
+            integ = sum(u * (w1 - w0)
+                        for u, (w0, w1) in zip(per_dim[d], wins))
+            assert integ == pytest.approx(
+                tl.dim_utilization(d) * res.makespan, rel=1e-9)
+
+
+def test_per_tenant_shares_partition_dim_utilization():
+    topo, res, trc = _traced_arbiter_run()
+    tl = BwTimeline.from_tracer(trc)
+    win = res.makespan / 5
+    shares = tl.per_dim_shares(win)
+    assert set(shares) == {"heavy", "light"}
+    per_dim = tl.per_dim_utilization(win)
+    for d in range(topo.num_dims):
+        for w in range(len(tl.windows(win))):
+            total = sum(shares[t][d][w] for t in shares)
+            assert total == pytest.approx(per_dim[d][w], rel=1e-9,
+                                          abs=1e-15)
+
+
+def test_queue_depth_is_nonnegative_and_drains():
+    topo, res, trc = _traced_arbiter_run()
+    tl = BwTimeline.from_tracer(trc)
+    depth = tl.queue_depth(res.makespan / 8)
+    assert len(depth) == topo.num_dims
+    for series in depth:
+        assert all(v >= -1e-9 for v in series)
+    # conservation: every arrival is either served in a (possibly amended)
+    # service record or was a preemption requeue that arrived again
+    n_enq = len(trc.enq_times)
+    n_served = sum(len(rec[2]) for per_dim in trc.services
+                   for rec in per_dim)
+    n_requeued = sum(len(cut_ops)
+                     for (_, _, _, _, cut_ops, _, _) in trc.preempts)
+    assert n_enq == n_served + n_requeued
+
+
+def test_windows_tile_and_validate():
+    topo, res, trc = _traced_arbiter_run()
+    tl = BwTimeline.from_tracer(trc)
+    wins = tl.windows(res.makespan / 4)
+    assert wins[0][0] == 0.0 and wins[-1][1] == pytest.approx(res.makespan)
+    for (a0, a1), (b0, b1) in zip(wins, wins[1:]):
+        assert a1 == pytest.approx(b0)
+    with pytest.raises(ValueError, match="window"):
+        tl.windows(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry + scheduler decision log
+# ---------------------------------------------------------------------------
+def test_registry_counters_spans_and_decision_bound():
+    reg = MetricsRegistry(max_decisions=3)
+    reg.inc("x")
+    reg.inc("x", 4)
+    with reg.span("s"):
+        pass
+    snap = reg.snapshot()
+    assert snap["counters"] == {"x": 5}
+    assert snap["spans"]["s"]["count"] == 1
+    from repro.obs import ScheduleDecision
+
+    for i in range(5):
+        reg.log_decision(ScheduleDecision(
+            collective="AR", tenant="t", policy="themis",
+            chunk_order=(0, 1), rank_signature=("AR",), cache_hit=False,
+            num_chunks=i))
+    assert len(reg.decisions) == 3                    # FIFO-bounded
+    assert [d.num_chunks for d in reg.decisions] == [2, 3, 4]
+    assert any("counter" in line for line in reg.report_rows())
+
+
+def test_global_registry_captures_scheduler_decisions():
+    topo = TOPOS["3D-SW_SW_SW_hetero"]
+    reqs = [CollectiveRequest(["AR", "RS", "AG"][i % 3], (4 + i) * MB,
+                              issue_time=i * 1e-4) for i in range(8)]
+    reg = enable_global()
+    try:
+        assert current_registry() is reg
+        simulate_requests(topo, reqs, chunks_per_collective=8)
+        assert reg.counters["scheduler.requests_scheduled"] == 8
+        assert len(reg.decisions) == 8
+        hits = reg.counters.get("scheduler.greedy_cache.hit", 0)
+        misses = reg.counters.get("scheduler.greedy_cache.miss", 0)
+        assert hits + misses > 0 and misses >= 1
+        assert "simulate.indexed" in reg.spans
+        assert "scheduler.schedule_pass" in reg.spans
+        for d in reg.decisions:
+            assert d.collective in ("AR", "RS", "AG")
+            assert d.num_chunks == 8 and len(d.chunk_order) > 0
+    finally:
+        disable_global()
+    assert current_registry() is None
+
+
+def test_explicit_registry_on_scheduler_wins_over_global():
+    topo = TOPOS["2D-SW_SW"]
+    mine = MetricsRegistry()
+    other = enable_global()
+    try:
+        sched = ThemisScheduler(LatencyModel.for_topology(topo), "themis",
+                                metrics=mine)
+        sched.schedule_request(CollectiveRequest("AR", 8 * MB), 4)
+        assert mine.counters["scheduler.requests_scheduled"] == 1
+        assert "scheduler.requests_scheduled" not in other.counters
+    finally:
+        disable_global()
+
+
+def test_metrics_off_by_default_keeps_scheduler_clean():
+    topo = TOPOS["2D-SW_SW"]
+    sched = ThemisScheduler(LatencyModel.for_topology(topo), "themis")
+    assert sched.metrics is None
+    sched.schedule_request(CollectiveRequest("AR", 8 * MB), 4)
+
+
+# ---------------------------------------------------------------------------
+# Tracer bookkeeping details
+# ---------------------------------------------------------------------------
+def test_tracer_event_counts_and_enqueue_property():
+    topo, res, trc = _traced_arbiter_run()
+    counts = trc.event_counts()
+    assert counts["services"] == sum(len(s) for s in res.dim_services)
+    assert counts["preempts"] == len(trc.preempts) > 0
+    assert counts["enqueues"] == len(trc.enqueues)
+    for dim, t in trc.enqueues[:5]:
+        assert 0 <= dim < topo.num_dims and t >= 0.0
+
+
+def test_preempted_service_records_match_engine_intervals():
+    """After preemption amends records in place, every trace record must
+    still mirror the engine's own (start, end) service log."""
+    topo, res, trc = _traced_arbiter_run()
+    for d in range(topo.num_dims):
+        for rec, si in zip(trc.services[d], res.dim_services[d]):
+            assert rec[0] == si.start and rec[1] == si.end
+            assert math.isfinite(rec[5]) and rec[5] >= 0.0

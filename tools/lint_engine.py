@@ -16,6 +16,13 @@ engine code:
     ``monotonic()``, ``datetime.now()`` and friends.  Simulated time is
     the only clock the engines may observe; a wall-clock read makes runs
     unreproducible and breaks the verify witness replay.
+  * **unguarded tracer calls** — any call on a tracer-ish name (``tracer``
+    or ``trc*``: the flight-recorder handle and its pre-bound hook
+    aliases) that is not lexically inside an ``if``/conditional whose test
+    mentions a tracer-ish name.  The observability contract is *zero
+    overhead when disabled*: every hook invocation in an engine hot loop
+    must sit behind an ``if trc is not None``-style branch, so the
+    disabled path costs one predictable branch per event and nothing else.
 
 A line ending in a ``# lint: allow`` comment is exempt (used where the
 construct is deliberate and documented, e.g. the exact-compare in the SMT
@@ -63,6 +70,25 @@ def _allowed(line: str) -> bool:
     return "lint: allow" in line
 
 
+def _is_tracerish(name: str) -> bool:
+    return name == "tracer" or name.startswith("trc")
+
+
+def _tracer_base(node: ast.expr) -> str | None:
+    """The tracer-ish base name of a call target, if any: ``trc_enq(...)``,
+    ``trc.service_start(...)``, ``tracer.enq_dims.append(...)`` -> name."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    if isinstance(node, ast.Name) and _is_tracerish(node.id):
+        return node.id
+    return None
+
+
+def _test_mentions_tracer(test: ast.expr) -> bool:
+    return any(isinstance(n, ast.Name) and _is_tracerish(n.id)
+               for n in ast.walk(test))
+
+
 def lint_file(path: Path) -> list[str]:
     src = path.read_text()
     lines = src.splitlines()
@@ -80,6 +106,29 @@ def lint_file(path: Path) -> list[str]:
         line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
         if not _allowed(line):
             out.append(f"{rel}:{node.lineno}: {msg}")
+
+    def check_guards(node: ast.AST, guarded: bool) -> None:
+        """Reject tracer-hook calls outside a tracer-conditional branch
+        (see module docstring: the zero-overhead-when-disabled contract)."""
+        if isinstance(node, (ast.If, ast.IfExp)):
+            inner = guarded or _test_mentions_tracer(node.test)
+            check_guards(node.test, guarded)
+            body = node.body if isinstance(node.body, list) else [node.body]
+            orelse = (node.orelse if isinstance(node.orelse, list)
+                      else [node.orelse] if node.orelse is not None else [])
+            for child in body + orelse:
+                check_guards(child, inner)
+            return
+        if isinstance(node, ast.Call):
+            base = _tracer_base(node.func)
+            if base is not None and not guarded:
+                report(node, f"unguarded tracer call on {base!r} "
+                       "(hot-loop hooks must sit behind an "
+                       "'if <tracer> is not None' branch)")
+        for child in ast.iter_child_nodes(node):
+            check_guards(child, guarded)
+
+    check_guards(tree, False)
 
     for node in ast.walk(tree):
         if isinstance(node, ast.Compare):
