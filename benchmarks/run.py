@@ -21,6 +21,7 @@ import sys
 def main() -> None:
     from benchmarks import (
         beyond_paper,
+        faults_study,
         kernels_bench,
         fig8_allreduce,
         fig9_activity,
@@ -52,6 +53,7 @@ def main() -> None:
         ("topo_search", topo_search),
         ("traffic", traffic_study),
         ("verify", verify_study),
+        ("faults", faults_study),
         ("insights", insights_study),
         ("beyond", beyond_paper),
         ("roofline", roofline_table),

@@ -83,6 +83,14 @@ class Scenario:
     simulation; retrieve the armed tracers via the factory's own records
     (e.g. ``lambda: traces.append(Tracer()) or traces[-1]``) or a closure
     per scenario.
+
+    ``faults`` (a :class:`repro.faults.FaultSchedule`) injects a fault
+    timeline into this scenario's run; ``replan=True`` additionally arms
+    the Themis graceful-degradation hook (re-plans un-issued chunks at
+    each BW fault boundary).  Faults are deliberately NOT part of
+    :meth:`schedule_key` — the fault-free chunk schedules are what
+    re-planning degrades from, so scenarios differing only in faults
+    still share one scheduling pass and one task-array build.
     """
 
     topology: Topology
@@ -100,6 +108,8 @@ class Scenario:
     label: str = ""
     traffic: Any | None = None   # repro.traffic.TrafficGraph
     tracer_factory: Callable[[], Any] | None = None
+    faults: Any | None = None    # repro.faults.FaultSchedule
+    replan: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "requests", tuple(self.requests))
@@ -108,6 +118,8 @@ class Scenario:
                 "pass either requests or traffic, not both")
         if self.traffic is None and not self.requests:
             raise ValueError("scenario needs requests or traffic")
+        if self.replan and self.faults is None:
+            raise ValueError("replan=True requires faults")
 
     def schedule_key(self) -> tuple:
         """Everything the chunk schedules are a function of."""
@@ -360,6 +372,11 @@ def _run_scenario(sc: Scenario, groups: list[list[Chunk]],
                   ta: TaskArrays) -> SimResult:
     arb = sc.arbiter_factory() if sc.arbiter_factory is not None else None
     trc = sc.tracer_factory() if sc.tracer_factory is not None else None
+    replanner = None
+    if sc.replan:
+        from repro.faults.replan import make_replanner
+
+        replanner = make_replanner(sc.topology, sc.policy)
     if sc.traffic is not None:
         kw = sc.traffic.sim_kwargs()
     else:
@@ -373,7 +390,8 @@ def _run_scenario(sc: Scenario, groups: list[list[Chunk]],
         intra=sc.intra, fusion=sc.fusion, fusion_limit=sc.fusion_limit,
         jitter=sc.jitter, seed=sc.seed,
         arbiter=arb, preempt_penalty_s=sc.preempt_penalty_s,
-        engine="indexed", task_arrays=ta, tracer=trc, **kw)
+        engine="indexed", task_arrays=ta, tracer=trc,
+        faults=sc.faults, replanner=replanner, **kw)
 
 
 def simulate_batch(

@@ -35,7 +35,9 @@ from __future__ import annotations
 import math
 from typing import Iterable, Sequence
 
-# (op_id, dim, wire_bytes, tenant) — one row per chunk stage.
+# (op_id, dim, wire_bytes, tenant[, group]) — one row per chunk stage.
+# The trailing group element is optional (fault-aware engines pass it so
+# failed groups' abandoned work can be exempted from the lost-chunk check).
 TaskRow = tuple[tuple[int, int], int, float, str]
 
 _REL = 1e-9
@@ -92,16 +94,31 @@ def check_final(
     enforced: bool = False,
     arbiter=None,
     served_base: dict | None = None,
+    failed: frozenset | None = None,
 ) -> None:
     """End-of-run conservation / ordering / attribution checks (both
-    engines call this with their own state; see module docstring)."""
+    engines call this with their own state; see module docstring).
+
+    ``failed`` — the set of request groups the fault machinery marked
+    failed (retry exhaustion).  A failed group's unserved stages are
+    abandoned by design, so they are exempt from the lost-chunk check, and
+    wire conservation is restated over the ops that actually served (their
+    per-row wire bytes must still sum to the engine's accounting — the
+    conservation theorem holds across re-rating, aborts and retries).
+    """
     # -- every chunk stage served exactly once (bytes cannot vanish or
     #    duplicate across preemption splits) ------------------------------
     expected_wire = [0.0] * num_dims
     expected_ops: dict[tuple[int, int], int] = {}
-    for op, dim, wire, _tenant in tasks:
+    op_wire: dict[tuple[int, int], float] = {}
+    op_group: dict[tuple[int, int], int] = {}
+    for row in tasks:
+        op, dim, wire = row[0], row[1], row[2]
         expected_wire[dim] += wire
         expected_ops[op] = dim
+        op_wire[op] = wire
+        if len(row) > 4:
+            op_group[op] = row[4]
     served_count: dict[tuple[int, int], int] = {}
     for dim in range(num_dims):
         for op in dim_order[dim]:
@@ -116,12 +133,23 @@ def check_final(
                     f"belongs to dim {expected_ops.get(op)}")
     if not enforced:
         # Enforced-order runs may legitimately strand tasks whose mandated
-        # slot never arrives; everywhere else a missing op is a lost chunk.
-        lost = [op for op in expected_ops if op not in served_count]
+        # slot never arrives, and a failed group's remaining work is
+        # abandoned by design; everywhere else a missing op is a lost chunk.
+        lost = [op for op in expected_ops
+                if op not in served_count
+                and (not failed or op_group.get(op) not in failed)]
         if lost:
             raise InvariantViolation(
                 f"[{engine}] {len(lost)} chunk stage(s) never served "
                 f"(lost chunks): {sorted(lost)[:8]}...")
+        if failed:
+            # Conservation over what actually drained: failed groups'
+            # unserved stages moved no bytes, so the expectation is the sum
+            # of served ops' wire bytes per dim.
+            expected_wire = [0.0] * num_dims
+            for dim in range(num_dims):
+                for op in dim_order[dim]:
+                    expected_wire[dim] += op_wire[op]
         for dim in range(num_dims):
             if not _close(dim_wire[dim], expected_wire[dim], _ABS_B):
                 raise InvariantViolation(

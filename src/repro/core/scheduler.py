@@ -58,6 +58,18 @@ def baseline_order(num_dims: int, collective: str) -> list[StageOp]:
     return rs + ag
 
 
+def _collective_of(chunks: Sequence[Chunk]) -> str | None:
+    """Recover the collective kind from scheduled chunks (RS-only, AG-only
+    or both phases -> AR).  ``None`` if no chunk carries a schedule."""
+    for c in chunks:
+        if c.schedule:
+            phases = {phase for phase, _ in c.schedule}
+            if len(phases) == 2:
+                return "AR"
+            return "RS" if Phase.RS in phases else "AG"
+    return None
+
+
 def _sorted_dims(loads: Sequence[float], descending: bool) -> list[int]:
     # Stable sort; ties resolve to lower dim index (deterministic across
     # NPUs — required for Sec. 4.6.1 inter-dim schedule consistency).
@@ -235,6 +247,48 @@ class ThemisScheduler:
                 cache_hit=self._last_hit,
                 num_chunks=len(chunks)))
         return chunks
+
+    def replan_degraded(
+        self,
+        pending: Sequence[tuple[int, float, Sequence[Chunk]]],
+        bw_factors: Sequence[float],
+        *,
+        bw_floor: float = 1e-6,
+    ) -> dict[int, list[Chunk]]:
+        """Graceful-degradation hook: recompute pending chunks' dim orders
+        against post-fault per-dim bandwidth (the fault-injection fabric's
+        re-planning half of the ROADMAP closed-loop item).
+
+        ``pending`` lists not-yet-started request groups as
+        ``(group_id, issue_time, chunks)`` in issue order; ``bw_factors``
+        is the current per-dim BW multiplier vector (0 == fully out,
+        clamped to ``bw_floor``).  The chunk *partition* is preserved —
+        same count, sizes and stage counts per chunk — only the dim orders
+        are recomputed, by this scheduler's policy, on the degraded
+        topology with a fresh load tracker replayed over the pending
+        groups.  Deterministic and RNG-free, so the two engines stay in
+        lockstep.  Returns ``{group_id: replanned chunks}``.
+        """
+        from repro.faults.replan import degraded_topology
+
+        topo = degraded_topology(
+            self.latency_model.topology, bw_factors, floor=bw_floor)
+        sched = ThemisScheduler(LatencyModel.for_topology(topo), self.policy)
+        out: dict[int, list[Chunk]] = {}
+        for group_id, issue_time, chunks in pending:
+            kind = _collective_of(chunks)
+            if kind is None:  # nothing scheduled in this group — skip
+                continue
+            sched.tracker.advance_to(issue_time)
+            sched.tracker.begin_collective(kind)
+            replanned = []
+            for c in chunks:
+                nc = Chunk(c.index, c.size_bytes)
+                if c.schedule:
+                    nc.schedule = sched._schedule_chunk(kind, c.size_bytes)
+                replanned.append(nc)
+            out[group_id] = replanned
+        return out
 
     def _split_and_schedule(
         self,

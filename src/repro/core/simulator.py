@@ -72,6 +72,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import NamedTuple
@@ -195,6 +196,9 @@ class SimResult:
     group_streams: list[str] = field(default_factory=list)
     group_tenants: list[str] = field(default_factory=list)
     group_wire_bytes: list[float] = field(default_factory=list)
+    # -- fault-injection accounting (populated only when faults= is given) ---
+    failed_groups: list[tuple[int, float]] = field(default_factory=list)
+    group_retries: list[int] = field(default_factory=list)
 
     def avg_bw_utilization(self, topology: Topology) -> float:
         """Weighted average BW utilization (weights = per-dim BW budget).
@@ -522,6 +526,8 @@ def simulate(
     dep_delay_s: list[float] | None = None,
     check_invariants: bool = False,
     tracer=None,
+    faults=None,
+    replanner=None,
 ) -> SimResult:
     """Simulate one or more collectives (``chunk_groups``).
 
@@ -593,6 +599,28 @@ def simulate(
         result is bit-identical to the untraced run; off (default) costs
         one branch per event, same contract as ``check_invariants``.  One
         tracer records exactly one run.
+    ``faults``: a :class:`repro.faults.FaultSchedule` (or a pre-compiled
+        ``CompiledFaults``) injected into either engine as a fourth event
+        class.  At each fault boundary the affected dim's effective BW is
+        rescaled: an in-flight service is *re-rated* (bytes already drained
+        are conserved, the remainder continues at the new rate), future
+        services start at the degraded rate, and straggler-burst windows
+        layer extra lognormal sigma on service times.  A fully-out dim cuts
+        its in-flight service at chunk granularity (undrained chunks
+        requeue) and queued chunks follow the schedule's
+        :class:`~repro.faults.RetryPolicy`: timeout, exponential backoff
+        with jitter drawn from the simulation RNG, and after
+        ``max_attempts`` the chunk's whole request group is marked failed
+        (``SimResult.failed_groups``; its unserved work is abandoned and
+        dependents of a failed group fail transitively).  ``None``
+        (default) is byte-for-byte the fault-free engine.  Mutually
+        exclusive with ``enforced_order``.
+    ``replanner``: graceful-degradation hook (see
+        :func:`repro.faults.make_replanner`), called at every BW-changing
+        fault boundary with ``(now, factors, pending)`` where ``pending``
+        lists the not-yet-started groups; it returns re-planned chunk
+        schedules computed against the degraded fabric, which the engine
+        applies to those groups' un-issued work.  Requires ``faults``.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; want {ENGINES}")
@@ -613,8 +641,34 @@ def simulate(
         streams = ["default"] * n_groups
     if len(tenants) != n_groups or len(streams) != n_groups:
         raise ValueError("tenants/streams must match chunk_groups")
+    for g, t in enumerate(issue_times):
+        if not math.isfinite(t) or t < 0:
+            raise ValueError(
+                f"issue_times[{g}] = {t!r}: issue times must be finite "
+                "and >= 0")
+    for g, group in enumerate(chunk_groups):
+        for c in group:
+            if not math.isfinite(c.size_bytes) or c.size_bytes < 0:
+                raise ValueError(
+                    f"chunk_groups[{g}] chunk {c.index}: size_bytes "
+                    f"{c.size_bytes!r} must be finite and >= 0")
     if arbiter is not None and enforced_order is not None:
         raise ValueError("arbiter and enforced_order are mutually exclusive")
+    if faults is not None and enforced_order is not None:
+        # An enforced per-dim order would deadlock against retry/abandon
+        # reordering (a failed group's ops never arrive; the dim idles
+        # forever waiting its turn).  No user needs the combination.
+        raise ValueError("faults and enforced_order are mutually exclusive")
+    if replanner is not None and faults is None:
+        raise ValueError("replanner requires faults")
+    flt = None
+    if faults is not None:
+        compile_fn = getattr(faults, "compile", None)
+        flt = compile_fn(topology.num_dims) if callable(compile_fn) else faults
+        if getattr(flt, "num_dims", None) != topology.num_dims:
+            raise ValueError(
+                f"faults were compiled for {getattr(flt, 'num_dims', None)} "
+                f"dims but the topology has {topology.num_dims}")
     if dep_delay_s is not None and deps is None:
         raise ValueError("dep_delay_s requires deps")
     if deps is not None and enforced_order is not None:
@@ -668,7 +722,7 @@ def simulate(
                 jitter=jitter, seed=seed, tenants=tenants, streams=streams,
                 arbiter=arbiter, penalty=penalty, task_arrays=task_arrays,
                 deps=deps, dep_delay=dep_delay_s, chk=check_invariants,
-                tracer=tracer)
+                tracer=tracer, faults=flt, replanner=replanner)
     with reg.span("simulate.reference") if reg is not None else nullcontext():
         return _simulate_reference(
             topology, chunk_groups, issue_times=issue_times,
@@ -676,7 +730,8 @@ def simulate(
             fusion_limit=fusion_limit, enforced_order=enforced_order,
             jitter=jitter, seed=seed, tenants=tenants, streams=streams,
             arbiter=arbiter, penalty=penalty, deps=deps,
-            dep_delay=dep_delay_s, chk=check_invariants, tracer=tracer)
+            dep_delay=dep_delay_s, chk=check_invariants, tracer=tracer,
+            faults=flt, replanner=replanner)
 
 
 # ---------------------------------------------------------------------------
@@ -702,6 +757,8 @@ def _simulate_reference(
     dep_delay: list[float] | None = None,
     chk: bool = False,
     tracer=None,
+    faults=None,
+    replanner=None,
 ) -> SimResult:
     import random
 
@@ -721,8 +778,10 @@ def _simulate_reference(
     tasks: dict[OpId, StageTask] = {}
     group_of_chunk: dict[int, int] = {}
     group_wire = [0.0] * n_groups
+    group_cid_offset = [0] * n_groups  # global chunk-id base per group
     offset = 0
     for g, group in enumerate(chunk_groups):
+        group_cid_offset[g] = offset
         built = _build_tasks(lm, group, id_offset=offset, group=g,
                              priority=priorities[g], tenant=tenants[g])
         tasks.update(built)
@@ -769,6 +828,256 @@ def _simulate_reference(
         task.ready_time = t
         task.arrival_seq = next(seq)
         heapq.heappush(events, (t, task.arrival_seq, "ready", task))
+
+    # -- fault injection (repro.faults) --------------------------------------
+    # Every fault structure and closure lives behind this one guard; when
+    # ``flt`` is None the engine touches none of it (the fault-free path is
+    # byte-for-byte the pre-fault engine — no extra seq/RNG consumption).
+    flt = faults
+    if flt is not None:
+        flt_retry = flt.retry
+        flt_bounds = flt.boundaries
+        cur_factor = [1.0] * num_dims   # current BW multiplier per dim
+        cur_sigma = [0.0] * num_dims    # extra straggler sigma per dim
+        dim_down = [False] * num_dims
+        group_started = [False] * n_groups  # any ready event popped yet?
+        group_failed = [False] * n_groups
+        group_retries = [0] * n_groups
+        failed_log: list[tuple[int, float]] = []
+        flt_att: dict[OpId, int] = {}   # retry attempts per op
+        flt_ep: dict[OpId, int] = {}    # queue-residency epoch per op
+
+        def flt_enq(task: StageTask, now: float) -> None:
+            # New queue residency: bump the op's epoch (invalidating any
+            # armed timeout) and, on a down dim, arm the retry timeout.
+            op = task.op_id
+            ep = flt_ep.get(op, 0) + 1
+            flt_ep[op] = ep
+            if dim_down[task.dim]:
+                heapq.heappush(events, (now + flt_retry.timeout_s,
+                                        next(seq), "timeout", (task, ep)))
+
+        def flt_fail(g0: int, now: float) -> None:
+            # Exhausted retries: fail the group, purge its queued work, and
+            # fail dependents transitively (they can never be released).
+            work = [g0]
+            while work:
+                g = work.pop()
+                if group_failed[g]:
+                    continue
+                group_failed[g] = True
+                failed_log.append((g, now))
+                if trc is not None:
+                    trc.group_failed(g, now)
+                for d in range(num_dims):
+                    q = queues[d]
+                    kept = [t for t in q if t.group != g]
+                    if len(kept) != len(q):
+                        for t in q:
+                            if t.group == g:
+                                flt_ep[t.op_id] = flt_ep.get(t.op_id, 0) + 1
+                        queues[d][:] = kept
+                if use_deps:
+                    work.extend(dep_children[g])
+
+        def flt_requeue(cut: list, now: float) -> None:
+            for t in cut:
+                if group_failed[t.group]:
+                    continue
+                queues[t.dim].append(t)
+                if trc_enq is not None:
+                    trc_enq(t.dim)
+                    trc_enq_t(now)
+                if on_enq is not None:
+                    on_enq(t.dim, t.tenant, now)
+                flt_enq(t, now)
+
+        def flt_abort(dim: int, svc: _Service, now: float) -> None:
+            # Outage hit an in-flight service: chunks whose data already
+            # drained complete, the rest are cut and requeued — the same
+            # byte-conserving split rule as arbiter preemption, except the
+            # keep set may be empty (nothing drained yet).
+            nonlocal makespan
+            elapsed_bytes = (now - svc.start) * svc.rate
+            keep: list[StageTask] = []
+            acc = 0.0
+            for t in svc.batch:
+                if acc + t.wire_bytes > elapsed_bytes:
+                    break
+                keep.append(t)
+                acc += t.wire_bytes
+            cut = svc.batch[len(keep):]
+            if not cut:
+                return
+            makespan = max(makespan, now)
+            cut_wire = sum(t.wire_bytes for t in cut)
+            dim_busy[dim] -= svc.end - now
+            dim_wire[dim] -= cut_wire
+            busy_until[dim] = now
+            cut_ids = {t.op_id for t in cut}
+            dim_order[dim] = [o for o in dim_order[dim] if o not in cut_ids]
+            s0 = dim_services[dim][svc.svc_idx][0]
+            groups_kept = (tuple(sorted({t.group for t in keep})) if keep
+                           else dim_services[dim][svc.svc_idx].groups)
+            dim_services[dim][svc.svc_idx] = ServiceInterval(
+                s0, now, groups_kept)
+            if trc is not None:
+                trc.service_abort(dim, svc.svc_idx, now, len(keep),
+                                  tuple(t.op_id for t in cut), cut_wire)
+            services.pop(svc.sid)
+            if keep:
+                svc.sid = next(seq)
+                svc.end = now
+                svc.batch = keep
+                services[svc.sid] = svc
+                a = max(t.fixed_delay for t in keep)
+                heapq.heappush(events, (now, next(seq), "free",
+                                        (dim, svc.sid)))
+                heapq.heappush(events, (now + a, next(seq), "done",
+                                        (dim, svc.sid)))
+            else:
+                inflight[dim] = None
+            flt_requeue(cut, now)
+            if arbiter is not None:
+                arbiter.on_preempted(dim, cut, now)
+
+        def flt_outage_start(dim: int, now: float) -> None:
+            # Arm retry timeouts for chunks already queued on the dim (the
+            # in-flight cut below re-enters through flt_requeue -> flt_enq,
+            # which arms its own), then cut the in-flight service.
+            for t in sorted(queues[dim], key=lambda t: t.arrival_seq):
+                heapq.heappush(events, (now + flt_retry.timeout_s,
+                                        next(seq), "timeout",
+                                        (t, flt_ep.get(t.op_id, 0))))
+            svc = inflight[dim]
+            if svc is not None and svc.end > now:
+                flt_abort(dim, svc, now)
+
+        def flt_recover(dim: int, now: float) -> None:
+            # Invalidate every armed timeout on the dim: its queued chunks
+            # are serviceable again.
+            for t in queues[dim]:
+                flt_ep[t.op_id] = flt_ep.get(t.op_id, 0) + 1
+
+        def flt_timeout(task: StageTask, ep: int, now: float) -> None:
+            op = task.op_id
+            if (flt_ep.get(op, 0) != ep or group_failed[task.group]
+                    or not dim_down[task.dim]):
+                return  # stale arm: the chunk moved, failed, or recovered
+            att = flt_att.get(op, 0) + 1
+            flt_att[op] = att
+            group_retries[task.group] += 1
+            if att >= flt_retry.max_attempts:
+                if trc is not None:
+                    trc.retry(task.dim, op, now, att, now)
+                flt_fail(task.group, now)
+                return
+            queues[task.dim].remove(task)
+            delay = flt_retry.backoff_s * flt_retry.multiplier ** (att - 1)
+            if flt_retry.jitter > 0.0:
+                delay *= 1.0 + flt_retry.jitter * rng.random()
+            if trc is not None:
+                trc.retry(task.dim, op, now, att, now + delay)
+            push_ready(task, now + delay)
+
+        def flt_rerate(dim: int, svc: _Service, now: float,
+                       scale: float) -> None:
+            # BW changed under an in-flight service: bytes already drained
+            # are conserved (virtual-start shift), the remainder continues
+            # at the new rate.  ``scale`` is old_factor / new_factor.
+            new_end = now + (svc.end - now) * scale
+            dim_busy[dim] += new_end - svc.end
+            busy_until[dim] = new_end
+            svc.start = now - (now - svc.start) * scale
+            svc.rate = svc.rate / scale
+            iv = dim_services[dim][svc.svc_idx]
+            dim_services[dim][svc.svc_idx] = ServiceInterval(
+                iv.start, new_end, iv.groups)
+            if trc is not None:
+                trc.service_rerate(dim, svc.svc_idx, now, new_end, scale)
+            services.pop(svc.sid)
+            svc.sid = next(seq)
+            svc.end = new_end
+            services[svc.sid] = svc
+            a = max(t.fixed_delay for t in svc.batch)
+            heapq.heappush(events, (new_end, next(seq), "free",
+                                    (dim, svc.sid)))
+            heapq.heappush(events, (new_end + a, next(seq), "done",
+                                    (dim, svc.sid)))
+
+        def flt_replan(now: float) -> None:
+            # Graceful degradation: recompute the paper's load-balancing
+            # objective for every not-yet-started group against the
+            # current per-dim BW and rewrite those groups' stage tasks.
+            # Deterministic, no seq/RNG — both engines stay in lockstep.
+            pend = [g for g in range(n_groups)
+                    if not group_started[g] and not group_failed[g]
+                    and chunk_groups[g]]
+            if not pend:
+                return
+            pend.sort(key=lambda g: (resolved_issue[g], g))
+            new_map = replanner(
+                now, list(cur_factor),
+                [(g, resolved_issue[g], chunk_groups[g]) for g in pend])
+            applied = []
+            for g in pend:
+                new_chunks = new_map.get(g)
+                if new_chunks is None:
+                    continue
+                old = chunk_groups[g]
+                if len(new_chunks) != len(old):
+                    raise ValueError(
+                        f"replanner changed group {g}'s chunk count "
+                        f"({len(old)} -> {len(new_chunks)})")
+                gw = 0.0
+                for oc, nc in zip(old, new_chunks):
+                    if len(nc.schedule) != len(oc.schedule):
+                        raise ValueError(
+                            f"replanner changed group {g} chunk "
+                            f"{oc.index}'s stage count")
+                    dims_, wires_, fixeds_ = stage_sequence(
+                        lm.stage_tables, oc.size_bytes, nc.schedule)
+                    cid = oc.index + group_cid_offset[g]
+                    for s in range(len(dims_)):
+                        t = tasks[(cid, s)]
+                        t.dim = dims_[s]
+                        t.wire_bytes = wires_[s]
+                        t.fixed_delay = fixeds_[s]
+                        gw += wires_[s]
+                group_wire[g] = gw
+                applied.append(g)
+            if trc is not None and applied:
+                trc.replan(now, tuple(applied), tuple(cur_factor))
+
+        def flt_boundary(bi: int, now: float) -> None:
+            b = flt_bounds[bi]
+            d = b.dim
+            old_f = cur_factor[d]
+            cur_factor[d] = b.factor
+            cur_sigma[d] = b.sigma
+            if trc is not None:
+                trc.fault(d, now, b.factor, b.sigma)
+            if b.down_start:
+                dim_down[d] = True
+                flt_outage_start(d, now)
+            elif b.down_end:
+                dim_down[d] = False
+                flt_recover(d, now)
+            elif b.bw_change:
+                svc = inflight[d]
+                if svc is not None and svc.end > now:
+                    flt_rerate(d, svc, now, old_f / b.factor)
+            if replanner is not None and b.bw_change:
+                flt_replan(now)
+            if b.down_end:
+                try_start(d, now)
+
+        # Boundaries enter the heap before any ready push, so at equal
+        # timestamps a fault is applied before arrivals are served — the
+        # indexed engine pushes in the same order (lockstep tie-breaks).
+        for bi in range(len(flt_bounds)):
+            heapq.heappush(events, (flt_bounds[bi].t, next(seq),
+                                    "fault", bi))
 
     use_deps = deps is not None
     if use_deps:
@@ -900,6 +1209,9 @@ def _simulate_reference(
     def try_start(dim: int, now: float) -> None:
         if busy_until[dim] > now:
             return
+        if flt is not None:
+            if dim_down[dim]:
+                return  # fully-out dim: queued work waits on RetryPolicy
         batch = select_batch(dim, now)
         if not batch:
             return
@@ -911,6 +1223,13 @@ def _simulate_reference(
             occupy *= 1.0 + jitter * rng.random()
         if straggler[dim]:
             occupy *= rng.lognormvariate(0.0, straggler[dim])
+        if flt is not None:
+            f = cur_factor[dim]
+            if f < 1.0:
+                occupy = occupy / f  # degraded effective BW
+            bs = cur_sigma[dim]
+            if bs > 0.0:
+                occupy *= rng.lognormvariate(0.0, bs)
         if chk and dim_services[dim]:
             check_service_start(dim, now, dim_services[dim][-1][1],
                                 "reference")
@@ -996,6 +1315,8 @@ def _simulate_reference(
                     trc_enq_t(now)
                 if on_enq is not None:
                     on_enq(dim, t.tenant, now)
+                if flt is not None:
+                    flt_enq(t, now)
         arbiter.on_preempted(dim, cut, now)
 
     makespan = max(issue_times) if issue_times else 0.0
@@ -1004,8 +1325,12 @@ def _simulate_reference(
         # NB: stale events (from preempted services) must not advance the
         # makespan — their timestamps no longer correspond to real work.
         if kind == "ready":
-            makespan = max(makespan, now)
             task: StageTask = payload  # type: ignore[assignment]
+            if flt is not None and group_failed[task.group]:
+                continue  # abandoned work must not advance the makespan
+            makespan = max(makespan, now)
+            if flt is not None:
+                group_started[task.group] = True
             if pending_since[task.dim] is None:
                 pending_since[task.dim] = now
             queues[task.dim].append(task)
@@ -1014,11 +1339,14 @@ def _simulate_reference(
                 trc_enq_t(now)
             if on_enq is not None:
                 on_enq(task.dim, task.tenant, now)
+            if flt is not None:
+                flt_enq(task, now)
             if (arbiter is not None and getattr(arbiter, "preemption", False)
                     and busy_until[task.dim] > now):
                 maybe_preempt(task.dim, task, now)
             try_start(task.dim, now)
-            if chk and not use_enforced:
+            if chk and not use_enforced and (
+                    flt is None or not dim_down[task.dim]):
                 check_work_conserving(
                     task.dim, now, len(queues[task.dim]),
                     busy_until[task.dim], inflight[task.dim], "reference")
@@ -1033,17 +1361,20 @@ def _simulate_reference(
                 activity[dim].append((pending_since[dim], now))
                 pending_since[dim] = None
             try_start(dim, now)
-            if chk and not use_enforced:
+            if chk and not use_enforced and (
+                    flt is None or not dim_down[dim]):
                 check_work_conserving(dim, now, len(queues[dim]),
                                       busy_until[dim], inflight[dim],
                                       "reference")
-        else:  # done — chunk's next stage becomes ready
+        elif kind == "done":  # chunk's next stage becomes ready
             dim, sid = payload  # type: ignore[misc]
             svc = services.pop(sid, None)
             if svc is None:
                 continue  # stale: service was preempted and rescheduled
             makespan = max(makespan, now)
             for t in svc.batch:
+                if flt is not None and group_failed[t.group]:
+                    continue  # failed mid-flight: chain abandoned
                 nxt = (t.chunk_id, t.stage_idx + 1)
                 if nxt in tasks:
                     push_ready(tasks[nxt], now)
@@ -1057,6 +1388,12 @@ def _simulate_reference(
                     chains_left[t.group] -= 1
                     if not chains_left[t.group]:
                         complete_group(t.group, now)
+        elif flt is not None and kind == "fault":
+            flt_boundary(payload, now)
+        else:  # timeout (only scheduled when flt is armed)
+            if flt is not None:
+                task, ep = payload  # type: ignore[misc]
+                flt_timeout(task, ep, now)
 
     for dim in range(num_dims):
         if pending_since[dim] is not None:  # pragma: no cover - safety
@@ -1064,7 +1401,7 @@ def _simulate_reference(
 
     if use_deps:
         for g in range(n_groups):
-            if n_parents[g] > 0:
+            if n_parents[g] > 0 and (flt is None or not group_failed[g]):
                 raise ValueError(
                     f"dependency cycle: group {g} never became eligible")
         if group_finish:
@@ -1074,16 +1411,21 @@ def _simulate_reference(
     if chk:
         check_final(
             engine="reference", num_dims=num_dims,
-            tasks=((op, t.dim, t.wire_bytes, t.tenant)
+            tasks=((op, t.dim, t.wire_bytes, t.tenant, t.group)
                    for op, t in tasks.items()),
             dim_wire=dim_wire, dim_busy=dim_busy, dim_order=dim_order,
             dim_services=dim_services, group_finish=group_finish,
             resolved_issue=resolved_issue, makespan=makespan,
-            enforced=use_enforced, arbiter=arbiter, served_base=served_base)
+            enforced=use_enforced, arbiter=arbiter, served_base=served_base,
+            failed=(frozenset(g for g, _ in failed_log)
+                    if flt is not None else None))
 
     res = SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
                     dim_services, resolved_issue, group_finish,
                     list(streams), list(tenants), group_wire)
+    if flt is not None:
+        res.failed_groups = failed_log
+        res.group_retries = group_retries
     if trc is not None:
         trc.finalize(res, topology)
     return res
@@ -1113,6 +1455,8 @@ def _simulate_indexed(
     dep_delay: list[float] | None = None,
     chk: bool = False,
     tracer=None,
+    faults=None,
+    replanner=None,
 ) -> SimResult:
     """Same semantics as :func:`_simulate_reference`, near-linear cost.
 
@@ -1233,6 +1577,253 @@ def _simulate_indexed(
         t_arr[hh] = s
         heapq.heappush(events, (t, s, 0, hh))  # kind 0 = ready
 
+    # -- fault injection (repro.faults) --------------------------------------
+    # Mirrors the reference engine's fault block event-for-event (same seq
+    # and RNG consumption order); when ``flt`` is None none of this state
+    # exists and the engine is byte-for-byte the pre-fault engine.  Queue
+    # membership under faults uses lazy heap deletion: ``t_inq`` plus the
+    # arrival seq embedded in every heap entry decide whether an entry is
+    # alive (a purged/retried handle's stale entries are skipped on pop).
+    flt = faults
+    if flt is not None:
+        flt_retry = flt.retry
+        flt_bounds = flt.boundaries
+        cur_factor = [1.0] * num_dims
+        cur_sigma = [0.0] * num_dims
+        dim_down = [False] * num_dims
+        group_started = [False] * n_groups
+        group_failed = [False] * n_groups
+        group_retries = [0] * n_groups
+        failed_log: list[tuple[int, float]] = []
+        t_att = [0] * n_tasks      # retry attempts per op
+        t_ep = [0] * n_tasks       # queue-residency epoch per op
+        t_inq = [False] * n_tasks  # currently queued?
+        # Group -> contiguous handle range (build order groups handles).
+        group_h0 = [n_tasks] * n_groups
+        group_h1 = [0] * n_groups
+        for hh in range(n_tasks):
+            g = t_group[hh]
+            if hh < group_h0[g]:
+                group_h0[g] = hh
+            group_h1[g] = hh + 1
+        if replanner is not None:
+            # Replanning rewrites stage tasks in place — copy the (possibly
+            # shared/replayed) TaskArrays columns it touches.
+            t_dim = list(t_dim)
+            t_wire = list(t_wire)
+            t_fixed = list(t_fixed)
+
+        def flt_alive(entry) -> bool:
+            hh = entry[-1]
+            return t_inq[hh] and entry[-2] == t_arr[hh]
+
+        def flt_enq(hh: int, now: float) -> None:
+            t_inq[hh] = True
+            t_ep[hh] += 1
+            if dim_down[t_dim[hh]]:
+                heapq.heappush(events, (now + flt_retry.timeout_s,
+                                        next(seq), 4, (hh, t_ep[hh])))
+
+        def flt_queued(dim: int) -> list[int]:
+            # Alive queued handles on ``dim`` in arrival order — the same
+            # set and order as the reference engine's queue scan.
+            if use_arbiter:
+                entries = [e for heap in buckets[dim].values() for e in heap]
+            else:
+                entries = heaps[dim]
+            out = [e[-1] for e in entries if flt_alive(e)]
+            out.sort(key=t_arr.__getitem__)
+            return out
+
+        def flt_fail(g0: int, now: float) -> None:
+            work = [g0]
+            while work:
+                g = work.pop()
+                if group_failed[g]:
+                    continue
+                group_failed[g] = True
+                failed_log.append((g, now))
+                if trc is not None:
+                    trc.group_failed(g, now)
+                for hh in range(group_h0[g], group_h1[g]):
+                    if t_inq[hh]:
+                        t_inq[hh] = False
+                        t_ep[hh] += 1
+                        qlen[t_dim[hh]] -= 1
+                if use_deps:
+                    work.extend(dep_children[g])
+
+        def flt_abort(dim: int, svc: _Service, now: float) -> None:
+            nonlocal makespan
+            elapsed_bytes = (now - svc.start) * svc.rate
+            keep: list[int] = []
+            acc = 0.0
+            for hh in svc.batch:
+                if acc + t_wire[hh] > elapsed_bytes:
+                    break
+                keep.append(hh)
+                acc += t_wire[hh]
+            cut = svc.batch[len(keep):]
+            if not cut:
+                return
+            if now > makespan:
+                makespan = now
+            cut_wire = sum(t_wire[hh] for hh in cut)
+            dim_busy[dim] -= svc.end - now
+            dim_wire[dim] -= cut_wire
+            busy_until[dim] = now
+            svc_ops[dim][svc.svc_idx] = [(t_chunk[hh], t_stage[hh])
+                                         for hh in keep]
+            s0 = dim_services[dim][svc.svc_idx][0]
+            groups_kept = (tuple(sorted({t_group[hh] for hh in keep}))
+                           if keep
+                           else dim_services[dim][svc.svc_idx].groups)
+            dim_services[dim][svc.svc_idx] = ServiceInterval(
+                s0, now, groups_kept)
+            if trc is not None:
+                trc.service_abort(dim, svc.svc_idx, now, len(keep),
+                                  tuple((t_chunk[hh], t_stage[hh])
+                                        for hh in cut), cut_wire)
+            services.pop(svc.sid)
+            if keep:
+                svc.sid = next(seq)
+                svc.end = now
+                svc.batch = keep
+                services[svc.sid] = svc
+                a = max(t_fixed[hh] for hh in keep)
+                heapq.heappush(events, (now, next(seq), 1, (dim, svc.sid)))
+                heapq.heappush(events, (now + a, next(seq), 2,
+                                        (dim, svc.sid)))
+            else:
+                inflight[dim] = None
+            for hh in cut:
+                if not group_failed[t_group[hh]]:
+                    enqueue(hh, now)
+            if use_arbiter:
+                arbiter.on_preempted(dim, [view(hh) for hh in cut], now)
+
+        def flt_outage_start(dim: int, now: float) -> None:
+            for hh in flt_queued(dim):
+                heapq.heappush(events, (now + flt_retry.timeout_s,
+                                        next(seq), 4, (hh, t_ep[hh])))
+            svc = inflight[dim]
+            if svc is not None and svc.end > now:
+                flt_abort(dim, svc, now)
+
+        def flt_recover(dim: int, now: float) -> None:
+            for hh in flt_queued(dim):
+                t_ep[hh] += 1
+
+        def flt_timeout(hh: int, ep: int, now: float) -> None:
+            if (t_ep[hh] != ep or group_failed[t_group[hh]]
+                    or not dim_down[t_dim[hh]]):
+                return  # stale arm: the chunk moved, failed, or recovered
+            att = t_att[hh] + 1
+            t_att[hh] = att
+            group_retries[t_group[hh]] += 1
+            if att >= flt_retry.max_attempts:
+                if trc is not None:
+                    trc.retry(t_dim[hh], (t_chunk[hh], t_stage[hh]),
+                              now, att, now)
+                flt_fail(t_group[hh], now)
+                return
+            t_inq[hh] = False
+            qlen[t_dim[hh]] -= 1
+            delay = flt_retry.backoff_s * flt_retry.multiplier ** (att - 1)
+            if flt_retry.jitter > 0.0:
+                delay *= 1.0 + flt_retry.jitter * rng.random()
+            if trc is not None:
+                trc.retry(t_dim[hh], (t_chunk[hh], t_stage[hh]), now, att,
+                          now + delay)
+            push_ready(hh, now + delay)
+
+        def flt_rerate(dim: int, svc: _Service, now: float,
+                       scale: float) -> None:
+            new_end = now + (svc.end - now) * scale
+            dim_busy[dim] += new_end - svc.end
+            busy_until[dim] = new_end
+            svc.start = now - (now - svc.start) * scale
+            svc.rate = svc.rate / scale
+            iv = dim_services[dim][svc.svc_idx]
+            dim_services[dim][svc.svc_idx] = ServiceInterval(
+                iv.start, new_end, iv.groups)
+            if trc is not None:
+                trc.service_rerate(dim, svc.svc_idx, now, new_end, scale)
+            services.pop(svc.sid)
+            svc.sid = next(seq)
+            svc.end = new_end
+            services[svc.sid] = svc
+            a = max(t_fixed[hh] for hh in svc.batch)
+            heapq.heappush(events, (new_end, next(seq), 1, (dim, svc.sid)))
+            heapq.heappush(events, (new_end + a, next(seq), 2,
+                                    (dim, svc.sid)))
+
+        def flt_replan(now: float) -> None:
+            pend = [g for g in range(n_groups)
+                    if not group_started[g] and not group_failed[g]
+                    and chunk_groups[g]]
+            if not pend:
+                return
+            pend.sort(key=lambda g: (resolved_issue[g], g))
+            new_map = replanner(
+                now, list(cur_factor),
+                [(g, resolved_issue[g], chunk_groups[g]) for g in pend])
+            applied = []
+            for g in pend:
+                new_chunks = new_map.get(g)
+                if new_chunks is None:
+                    continue
+                old = chunk_groups[g]
+                if len(new_chunks) != len(old):
+                    raise ValueError(
+                        f"replanner changed group {g}'s chunk count "
+                        f"({len(old)} -> {len(new_chunks)})")
+                gw = 0.0
+                hh = group_h0[g]
+                for oc, nc in zip(old, new_chunks):
+                    if len(nc.schedule) != len(oc.schedule):
+                        raise ValueError(
+                            f"replanner changed group {g} chunk "
+                            f"{oc.index}'s stage count")
+                    dims_, wires_, fixeds_ = stage_sequence(
+                        tbl, oc.size_bytes, nc.schedule)
+                    for s in range(len(dims_)):
+                        t_dim[hh] = dims_[s]
+                        t_wire[hh] = wires_[s]
+                        t_fixed[hh] = fixeds_[s]
+                        gw += wires_[s]
+                        hh += 1
+                group_wire[g] = gw
+                applied.append(g)
+            if trc is not None and applied:
+                trc.replan(now, tuple(applied), tuple(cur_factor))
+
+        def flt_boundary(bi: int, now: float) -> None:
+            b = flt_bounds[bi]
+            d = b.dim
+            old_f = cur_factor[d]
+            cur_factor[d] = b.factor
+            cur_sigma[d] = b.sigma
+            if trc is not None:
+                trc.fault(d, now, b.factor, b.sigma)
+            if b.down_start:
+                dim_down[d] = True
+                flt_outage_start(d, now)
+            elif b.down_end:
+                dim_down[d] = False
+                flt_recover(d, now)
+            elif b.bw_change:
+                svc = inflight[d]
+                if svc is not None and svc.end > now:
+                    flt_rerate(d, svc, now, old_f / b.factor)
+            if replanner is not None and b.bw_change:
+                flt_replan(now)
+            if b.down_end:
+                try_start(d, now)
+
+        for bi in range(len(flt_bounds)):
+            heapq.heappush(events, (flt_bounds[bi].t, next(seq), 3, bi))
+
     use_deps = deps is not None
     if use_deps:
         # Dependency-gated release — mirrors the reference engine exactly
@@ -1313,12 +1904,27 @@ def _simulate_indexed(
                            (-t_prio[hh], t_wire[hh], t_arr[hh], hh))
         else:
             heapq.heappush(heaps[dim], (-t_prio[hh], t_arr[hh], hh))
+        if flt is not None:
+            flt_enq(hh, now)
 
     def select_batch(dim: int, now: float) -> list[int]:
         if not qlen[dim]:
             return []
         if use_arbiter:
             b = buckets[dim]
+            if flt is not None:
+                # Lazy deletion: drop stale heads (purged/retried handles)
+                # so the head-peek below only sees alive entries.
+                dead = []
+                for tn, heap in b.items():
+                    while heap and not flt_alive(heap[0]):
+                        heapq.heappop(heap)
+                    if not heap:
+                        dead.append(tn)
+                for tn in dead:
+                    del b[tn]
+                if not b:
+                    return []
             best_tn = None
             best_key = None
             # The reference sorts the whole queue by arbiter.order_key and
@@ -1338,10 +1944,17 @@ def _simulate_indexed(
             heap = b[best_tn]
             batch = []
             while heap and len(batch) < arb_quantum:
+                if flt is not None:
+                    if not flt_alive(heap[0]):
+                        heapq.heappop(heap)
+                        continue
                 batch.append(heapq.heappop(heap)[-1])
             if not heap:
                 del b[best_tn]
             qlen[dim] -= len(batch)
+            if flt is not None:
+                for hh in batch:
+                    t_inq[hh] = False
             return batch
         if use_enforced:
             order = enforced_order[dim]
@@ -1369,21 +1982,36 @@ def _simulate_indexed(
             qlen[dim] -= len(batch)
             return batch
         heap = heaps[dim]
+        if flt is not None:
+            while heap and not flt_alive(heap[0]):
+                heapq.heappop(heap)
+            if not heap:
+                return []
         h0 = heapq.heappop(heap)[-1]
         batch = [h0]
         if fusion:
             sat = t_fixed[h0] * dim_bw[dim]
             total = t_wire[h0]
             while heap and total < sat and len(batch) < fusion_limit:
+                if flt is not None:
+                    if not flt_alive(heap[0]):
+                        heapq.heappop(heap)
+                        continue
                 hh = heapq.heappop(heap)[-1]
                 batch.append(hh)
                 total += t_wire[hh]
         qlen[dim] -= len(batch)
+        if flt is not None:
+            for hh in batch:
+                t_inq[hh] = False
         return batch
 
     def try_start(dim: int, now: float) -> None:
         if busy_until[dim] > now:
             return
+        if flt is not None:
+            if dim_down[dim]:
+                return  # fully-out dim: queued work waits on RetryPolicy
         batch = select_batch(dim, now)
         if not batch:
             return
@@ -1398,6 +2026,13 @@ def _simulate_indexed(
             occupy *= 1.0 + jitter * rng.random()
         if straggler[dim]:
             occupy *= rng.lognormvariate(0.0, straggler[dim])
+        if flt is not None:
+            f = cur_factor[dim]
+            if f < 1.0:
+                occupy = occupy / f  # degraded effective BW
+            bs = cur_sigma[dim]
+            if bs > 0.0:
+                occupy *= rng.lognormvariate(0.0, bs)
         if chk and dim_services[dim]:
             check_service_start(dim, now, dim_services[dim][-1][1],
                                 "indexed")
@@ -1479,9 +2114,13 @@ def _simulate_indexed(
     while events:
         now, _, kind, payload = heapq.heappop(events)
         if kind == 0:  # ready
+            hh = payload
+            if flt is not None and group_failed[t_group[hh]]:
+                continue  # abandoned work must not advance the makespan
             if now > makespan:
                 makespan = now
-            hh = payload
+            if flt is not None:
+                group_started[t_group[hh]] = True
             dim = t_dim[hh]
             if pending_since[dim] is None:
                 pending_since[dim] = now
@@ -1489,7 +2128,8 @@ def _simulate_indexed(
             if use_arbiter and arb_preempt and busy_until[dim] > now:
                 maybe_preempt(dim, hh, now)
             try_start(dim, now)
-            if chk and not use_enforced:
+            if chk and not use_enforced and (
+                    flt is None or not dim_down[dim]):
                 check_work_conserving(dim, now, qlen[dim], busy_until[dim],
                                       inflight[dim], "indexed")
         elif kind == 1:  # free
@@ -1505,10 +2145,11 @@ def _simulate_indexed(
                 activity[dim].append((pending_since[dim], now))
                 pending_since[dim] = None
             try_start(dim, now)
-            if chk and not use_enforced:
+            if chk and not use_enforced and (
+                    flt is None or not dim_down[dim]):
                 check_work_conserving(dim, now, qlen[dim], busy_until[dim],
                                       inflight[dim], "indexed")
-        else:  # done — chunk's next stage becomes ready
+        elif kind == 2:  # done — chunk's next stage becomes ready
             dim, sid = payload
             svc = services.pop(sid, None)
             if svc is None:
@@ -1516,6 +2157,8 @@ def _simulate_indexed(
             if now > makespan:
                 makespan = now
             for hh in svc.batch:
+                if flt is not None and group_failed[t_group[hh]]:
+                    continue  # failed mid-flight: chain abandoned
                 if not t_last[hh]:
                     push_ready(hh + 1, now)  # stages are contiguous handles
                     continue
@@ -1529,6 +2172,12 @@ def _simulate_indexed(
                     chains_left[g] -= 1
                     if not chains_left[g]:
                         complete_group(g, now)
+        elif flt is not None and kind == 3:  # fault boundary
+            flt_boundary(payload, now)
+        else:  # timeout (only scheduled when flt is armed)
+            if flt is not None:
+                hh, ep = payload
+                flt_timeout(hh, ep, now)
 
     for dim in range(num_dims):
         if pending_since[dim] is not None:  # pragma: no cover - safety
@@ -1536,7 +2185,7 @@ def _simulate_indexed(
 
     if use_deps:
         for g in range(n_groups):
-            if n_parents[g] > 0:
+            if n_parents[g] > 0 and (flt is None or not group_failed[g]):
                 raise ValueError(
                     f"dependency cycle: group {g} never became eligible")
         if group_finish:
@@ -1549,14 +2198,19 @@ def _simulate_indexed(
         check_final(
             engine="indexed", num_dims=num_dims,
             tasks=(((t_chunk[h], t_stage[h]), t_dim[h], t_wire[h],
-                    t_tenant[h]) for h in range(n_tasks)),
+                    t_tenant[h], t_group[h]) for h in range(n_tasks)),
             dim_wire=dim_wire, dim_busy=dim_busy, dim_order=dim_order,
             dim_services=dim_services, group_finish=group_finish,
             resolved_issue=resolved_issue, makespan=makespan,
-            enforced=use_enforced, arbiter=arbiter, served_base=served_base)
+            enforced=use_enforced, arbiter=arbiter, served_base=served_base,
+            failed=(frozenset(g for g, _ in failed_log)
+                    if flt is not None else None))
     res = SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
                     dim_services, resolved_issue, group_finish,
                     list(streams), list(tenants), group_wire)
+    if flt is not None:
+        res.failed_groups = failed_log
+        res.group_retries = group_retries
     if trc is not None:
         trc.finalize(res, topology)
     return res
@@ -1575,10 +2229,18 @@ def simulate_scheduled(
     engine: str = "indexed",
     check_invariants: bool = False,
     tracer=None,
+    faults=None,
+    replan: bool = False,
 ) -> tuple[SimResult, list[Chunk]]:
-    """Schedule one collective with ``policy`` and simulate it."""
+    """Schedule one collective with ``policy`` and simulate it.
+
+    ``faults``/``replan``: fault timeline and the graceful-degradation
+    re-planning hook (built for this topology/policy when ``replan``).
+    """
     from repro.core.scheduler import schedule_collective
 
+    if replan and faults is None:
+        raise ValueError("replan=True requires faults")
     chunks = schedule_collective(
         topology,
         collective,
@@ -1587,9 +2249,14 @@ def simulate_scheduled(
         policy,
         water_filling=water_filling,
     )
+    replanner = None
+    if replan:
+        from repro.faults.replan import make_replanner
+
+        replanner = make_replanner(topology, policy)
     res = simulate(topology, [chunks], intra=intra, fusion=fusion,
                    engine=engine, check_invariants=check_invariants,
-                   tracer=tracer)
+                   tracer=tracer, faults=faults, replanner=replanner)
     return res, chunks
 
 
@@ -1608,6 +2275,8 @@ def simulate_requests(
     scheduler=None,
     check_invariants: bool = False,
     tracer=None,
+    faults=None,
+    replan: bool = False,
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Online entry point: schedule and simulate an arrival-time-aware
     request stream.
@@ -1635,6 +2304,8 @@ def simulate_requests(
     """
     from repro.core.scheduler import ThemisScheduler
 
+    if replan and faults is None:
+        raise ValueError("replan=True requires faults")
     if scheduler is None:
         lm = LatencyModel.for_topology(topology)
         sched_ctx = ThemisScheduler(lm, policy).isolated_run()
@@ -1649,6 +2320,12 @@ def simulate_requests(
     with sched_ctx as sched:
         groups = sched.schedule_stream(
             requests, chunks_per_collective, water_filling=water_filling)
+    replanner = None
+    if replan:
+        from repro.faults.replan import make_replanner
+
+        replanner = make_replanner(
+            topology, scheduler.policy if scheduler is not None else policy)
     res = simulate(
         topology,
         groups,
@@ -1663,5 +2340,7 @@ def simulate_requests(
         engine=engine,
         check_invariants=check_invariants,
         tracer=tracer,
+        faults=faults,
+        replanner=replanner,
     )
     return res, groups

@@ -1,0 +1,30 @@
+"""Fault-injection fabric: deterministic fault timelines, outage retry
+semantics, and Themis re-planning under degraded bandwidth.
+
+See :mod:`repro.faults.schedule` for the timeline model and
+:mod:`repro.faults.replan` for the graceful-degradation hook.
+"""
+from repro.faults.replan import degraded_topology, make_replanner
+from repro.faults.schedule import (
+    BwDegradation,
+    CompiledFaults,
+    DimOutage,
+    FaultBoundary,
+    FaultSchedule,
+    LinkFlap,
+    RetryPolicy,
+    StragglerBurst,
+)
+
+__all__ = [
+    "BwDegradation",
+    "CompiledFaults",
+    "DimOutage",
+    "FaultBoundary",
+    "FaultSchedule",
+    "LinkFlap",
+    "RetryPolicy",
+    "StragglerBurst",
+    "degraded_topology",
+    "make_replanner",
+]

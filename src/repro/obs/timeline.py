@@ -96,7 +96,7 @@ class BwTimeline:
 
     def dim_utilization(self, dim: int) -> float:
         """One dimension's BW utilization over the whole run."""
-        if self.makespan <= 0:
+        if self.makespan <= 0 or self.dim_bw[dim] <= 0:
             return 0.0
         return self.dim_wire[dim] / (self.makespan * self.dim_bw[dim])
 
@@ -141,7 +141,7 @@ class BwTimeline:
             vals = []
             for (w0, w1) in wins:
                 span = w1 - w0
-                vals.append(0.0 if span <= 0 else
+                vals.append(0.0 if span <= 0 or cap <= 0 else
                             self._drained(services[dim], w0, w1) /
                             (span * cap))
             out.append(vals)
@@ -172,7 +172,7 @@ class BwTimeline:
                 rows = out[rec[SVC_TENANT]][dim]
                 for w, (w0, w1) in enumerate(wins):
                     span = w1 - w0
-                    if span <= 0:
+                    if span <= 0 or cap <= 0:
                         continue
                     got = _overlap_bytes(rec, w0, w1)
                     if got:

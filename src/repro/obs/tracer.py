@@ -79,6 +79,8 @@ class Tracer:
 
     __slots__ = ("engine", "num_dims", "n_groups", "services", "grants",
                  "preempts", "enq_dims", "enq_times", "releases", "dep_edges",
+                 "faults", "aborts", "rerates", "retries", "group_fails",
+                 "replans",
                  "makespan", "dim_bw", "dim_wire", "dim_busy",
                  "dim_activity", "group_issue", "group_finish",
                  "group_streams", "group_tenants", "topology_name",
@@ -95,6 +97,13 @@ class Tracer:
         self.enq_times = array("d")
         self.releases: list[tuple[int, float]] = []
         self.dep_edges: list[tuple[int, int, float]] = []
+        # Fault-injection events (populated only when simulate(faults=...)):
+        self.faults: list[tuple[int, float, float, float]] = []
+        self.aborts: list[tuple[int, int, float, int, tuple, float]] = []
+        self.rerates: list[tuple[int, int, float, float, float]] = []
+        self.retries: list[tuple[int, tuple, float, int, float]] = []
+        self.group_fails: list[tuple[int, float]] = []
+        self.replans: list[tuple[float, tuple, tuple]] = []
         # finalize() snapshots:
         self.makespan = 0.0
         self.dim_bw: list[float] = []
@@ -149,6 +158,45 @@ class Tracer:
 
     def release(self, group: int, t: float) -> None:
         self.releases.append((group, t))
+
+    # -- fault-injection hooks (armed only via simulate(faults=...)) ---------
+    def fault(self, dim: int, t: float, factor: float, sigma: float) -> None:
+        """A fault boundary took effect: ``dim`` now runs at ``factor`` x
+        nominal BW with ``sigma`` extra straggler noise."""
+        self.faults.append((dim, t, factor, sigma))
+
+    def service_abort(self, dim: int, svc_idx: int, now: float,
+                      n_keep: int, cut_ops: tuple, cut_wire: float) -> None:
+        """An outage cut an in-flight service; like ``service_preempt`` the
+        record is amended in place to what actually drained."""
+        rec = self.services[dim][svc_idx]
+        rec[SVC_END] = now
+        rec[SVC_OPS] = rec[SVC_OPS][:n_keep]
+        rec[SVC_WIRE] = rec[SVC_WIRE] - cut_wire
+        self.aborts.append((dim, svc_idx, now, n_keep, cut_ops, cut_wire))
+
+    def service_rerate(self, dim: int, svc_idx: int, now: float,
+                       new_end: float, scale: float) -> None:
+        """A BW change re-rated an in-flight service (drained bytes
+        conserved; the remainder finishes at ``new_end``)."""
+        rec = self.services[dim][svc_idx]
+        rec[SVC_END] = new_end
+        self.rerates.append((dim, svc_idx, now, new_end, scale))
+
+    def retry(self, dim: int, op, now: float, attempt: int,
+              resume_at: float) -> None:
+        """A queued chunk on a down dim timed out.  ``resume_at > now`` is
+        a backoff re-arrival; ``resume_at == now`` is the final attempt
+        (the group fails)."""
+        self.retries.append((dim, op, now, attempt, resume_at))
+
+    def group_failed(self, group: int, t: float) -> None:
+        self.group_fails.append((group, t))
+
+    def replan(self, t: float, groups: tuple, factors: tuple) -> None:
+        """The graceful-degradation hook rewrote ``groups``'s un-issued
+        chunk schedules against per-dim BW ``factors``."""
+        self.replans.append((t, groups, factors))
 
     def dep_resolved(self, parent: int, child: int, t: float) -> None:
         self.dep_edges.append((parent, child, t))
@@ -209,6 +257,12 @@ class Tracer:
             "enqueues": len(self.enq_times),
             "releases": len(self.releases),
             "dep_edges": len(self.dep_edges),
+            "faults": len(self.faults),
+            "aborts": len(self.aborts),
+            "rerates": len(self.rerates),
+            "retries": len(self.retries),
+            "group_fails": len(self.group_fails),
+            "replans": len(self.replans),
             "groups": self.n_groups,
         }
 
@@ -303,6 +357,49 @@ class Tracer:
                             "s": "t", "name": "grant", "cat": "grant",
                             "args": {"chunks": n_chunks,
                                      "wire_bytes": wire}})
+            # Fault-injection instants (tid 0 — they affect the whole dim).
+            for (d, t, factor, sigma) in self.faults:
+                if d != dim:
+                    continue
+                evs.append({"ph": "i", "pid": pid, "tid": 0, "ts": t * M,
+                            "s": "t", "name": f"fault f={factor:g}",
+                            "cat": "fault",
+                            "args": {"bw_factor": factor,
+                                     "extra_sigma": sigma}})
+            for (d, svc_idx, t, n_keep, cut_ops, cut_wire) in self.aborts:
+                if d != dim:
+                    continue
+                evs.append({"ph": "i", "pid": pid, "tid": 0, "ts": t * M,
+                            "s": "t", "name": "abort", "cat": "abort",
+                            "args": {"kept_ops": n_keep,
+                                     "cut_ops": len(cut_ops),
+                                     "cut_wire_bytes": cut_wire}})
+            for (d, svc_idx, t, new_end, scale) in self.rerates:
+                if d != dim:
+                    continue
+                evs.append({"ph": "i", "pid": pid, "tid": 0, "ts": t * M,
+                            "s": "t", "name": "rerate", "cat": "rerate",
+                            "args": {"new_end_s": new_end,
+                                     "rate_scale": scale}})
+            for (d, op, t, attempt, resume_at) in self.retries:
+                if d != dim:
+                    continue
+                evs.append({"ph": "i", "pid": pid, "tid": 0, "ts": t * M,
+                            "s": "t", "name": f"retry #{attempt}",
+                            "cat": "retry",
+                            "args": {"op": list(op), "attempt": attempt,
+                                     "resume_at_s": resume_at}})
+        # Global (pid 0) fault instants: group failures and re-plans.
+        for (g, t) in self.group_fails:
+            evs.append({"ph": "i", "pid": 0, "tid": group_tid.get(g, 0),
+                        "ts": t * M, "s": "t", "name": f"g{g} failed",
+                        "cat": "group_fail", "args": {"group": g}})
+        for (t, groups, factors) in self.replans:
+            evs.append({"ph": "i", "pid": 0, "tid": 0, "ts": t * M,
+                        "s": "g", "name": f"replan x{len(groups)}",
+                        "cat": "replan",
+                        "args": {"groups": list(groups),
+                                 "bw_factors": list(factors)}})
         return {"traceEvents": evs, "displayTimeUnit": "ms",
                 "otherData": {"engine": self.engine,
                               "topology": self.topology_name,
@@ -320,7 +417,9 @@ def parse_chrome_trace(source) -> dict[str, Any]:
     bookkeeping.
 
     Returns ``{"groups": n, "services_per_dim": {dim: n}, "services": n,
-    "preempts": n, "grants": n, "flows": n, "dims": n}``.
+    "preempts": n, "grants": n, "flows": n, "dims": n, "faults": n,
+    "aborts": n, "rerates": n, "retries": n, "group_fails": n,
+    "replans": n}``.
     """
     if isinstance(source, dict):
         obj = source
@@ -330,6 +429,7 @@ def parse_chrome_trace(source) -> dict[str, Any]:
     groups = 0
     per_dim: dict[int, int] = {}
     preempts = grants = flows = 0
+    faults = aborts = rerates = retries = group_fails = replans = 0
     for ev in obj["traceEvents"]:
         cat = ev.get("cat")
         if cat == "group":
@@ -343,7 +443,22 @@ def parse_chrome_trace(source) -> dict[str, Any]:
             grants += 1
         elif cat == "dep" and ev.get("ph") == "s":
             flows += 1
+        elif cat == "fault":
+            faults += 1
+        elif cat == "abort":
+            aborts += 1
+        elif cat == "rerate":
+            rerates += 1
+        elif cat == "retry":
+            retries += 1
+        elif cat == "group_fail":
+            group_fails += 1
+        elif cat == "replan":
+            replans += 1
     return {"groups": groups, "services_per_dim": per_dim,
             "services": sum(per_dim.values()), "preempts": preempts,
             "grants": grants, "flows": flows,
+            "faults": faults, "aborts": aborts, "rerates": rerates,
+            "retries": retries, "group_fails": group_fails,
+            "replans": replans,
             "dims": (max(per_dim) + 1) if per_dim else 0}

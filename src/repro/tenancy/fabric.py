@@ -70,6 +70,8 @@ def simulate_fabric(
     engine: str = "indexed",
     check_invariants: bool = False,
     tracer=None,
+    faults=None,
+    replan: bool = False,
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Schedule and simulate a multi-tenant stream on one shared fabric.
 
@@ -81,8 +83,17 @@ def simulate_fabric(
     selects the simulator engine (see :func:`repro.core.simulator.simulate`).
     ``tracer`` arms the flight recorder (:class:`repro.obs.Tracer`) on the
     joint simulation — tenant lanes in the exported trace come from the
-    request tags.
+    request tags.  ``faults`` (a :class:`repro.faults.FaultSchedule`)
+    injects a fault timeline; ``replan=True`` additionally arms Themis
+    graceful degradation.
     """
+    if replan and faults is None:
+        raise ValueError("replan=True requires faults")
+    replanner = None
+    if replan:
+        from repro.faults.replan import make_replanner
+
+        replanner = make_replanner(topology, policy)
     groups = schedule_tenant_requests(
         topology, requests, policy=policy, shared_tracker=shared_tracker,
         chunks_per_collective=chunks_per_collective,
@@ -100,6 +111,8 @@ def simulate_fabric(
         engine=engine,
         check_invariants=check_invariants,
         tracer=tracer,
+        faults=faults,
+        replanner=replanner,
     )
     return res, groups
 

@@ -91,6 +91,8 @@ def simulate_traffic(
     scheduler=None,
     check_invariants: bool = False,
     tracer=None,
+    faults=None,
+    replan: bool = False,
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Schedule and simulate a traffic graph — the dependency-aware
     counterpart of ``simulate_requests``.
@@ -98,6 +100,10 @@ def simulate_traffic(
     ``tracer`` arms the flight recorder (:class:`repro.obs.Tracer`); on a
     dependency-gated graph the exported Chrome trace carries flow arrows
     for every resolved dependency edge.
+
+    ``faults`` (a :class:`repro.faults.FaultSchedule`) injects a fault
+    timeline; ``replan=True`` additionally arms Themis graceful
+    degradation (re-plan un-issued chunks at each BW fault boundary).
 
     The returned ``SimResult`` is indexed like ``graph.nodes``:
     ``group_issue`` holds each node's *resolved* issue time, so
@@ -107,6 +113,13 @@ def simulate_traffic(
     (the per-dim inter-tenant disciplines and preemption are downstream of
     release, so they compose with dependency gating unchanged).
     """
+    if replan and faults is None:
+        raise ValueError("replan=True requires faults")
+    replanner = None
+    if replan:
+        from repro.faults.replan import make_replanner
+
+        replanner = make_replanner(topology, policy)
     groups = schedule_traffic(
         topology, graph, policy=policy,
         chunks_per_collective=chunks_per_collective,
@@ -115,5 +128,6 @@ def simulate_traffic(
         topology, groups, intra=intra, fusion=fusion, jitter=jitter,
         seed=seed, arbiter=arbiter, preempt_penalty_s=preempt_penalty_s,
         engine=engine, check_invariants=check_invariants, tracer=tracer,
+        faults=faults, replanner=replanner,
         **graph.sim_kwargs())
     return res, groups

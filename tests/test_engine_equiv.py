@@ -769,3 +769,103 @@ def test_batch_tracer_factory_arms_one_tracer_per_scenario():
         assert_same(res, ref)
         assert trc.finished
         _assert_trace_faithful(trc, res, sc.topology)
+
+
+# ---------------------------------------------------------------------------
+# Faults x dependency-gated streams: release lockstep across retry/preempt
+# ---------------------------------------------------------------------------
+def test_dependency_release_survives_retried_predecessor():
+    """A successor must release only after its predecessor's last chunk
+    actually finishes — including when that predecessor's chunks timed out
+    on a dead dim and retried (satellite: faults x deps release)."""
+    from repro.faults import DimOutage, FaultSchedule, RetryPolicy
+    from repro.traffic import TrafficGraph, TrafficNode, simulate_traffic
+
+    topo = TOPOS["2D-SW_SW"]
+    graph = TrafficGraph(tuple(
+        [TrafficNode("head", request=CollectiveRequest("AR", 16 * MB),
+                     start_s=0.0)]
+        + [TrafficNode(f"tail{i}",
+                       request=CollectiveRequest("AR", 4 * MB),
+                       deps=("head",), compute_s=1e-5)
+           for i in range(3)]))
+    faults = FaultSchedule(
+        events=(DimOutage(dim=1, start=5e-5, end=6e-4),),
+        retry=RetryPolicy(timeout_s=4e-5, backoff_s=2e-5, max_attempts=20))
+    out = {}
+    for eng in ("indexed", "reference"):
+        out[eng], _ = simulate_traffic(
+            topo, graph, chunks_per_collective=6, engine=eng,
+            check_invariants=True, faults=faults)
+    assert_same(out["indexed"], out["reference"])
+    res = out["indexed"]
+    assert sum(res.group_retries) > 0          # the outage bit the head
+    assert not res.failed_groups
+    head_finish = res.group_finish[0]
+    assert head_finish > 6e-4                  # head stalled on the outage
+    for i in range(1, 4):                      # tails released after it
+        assert res.group_issue[i] == pytest.approx(head_finish + 1e-5)
+        assert res.group_finish[i] >= res.group_issue[i]
+
+
+def test_dependency_release_survives_failed_predecessor():
+    """Retry exhaustion on a predecessor must not deadlock its
+    successors' release bookkeeping — the chain fails transitively and
+    both engines account it identically."""
+    from repro.faults import DimOutage, FaultSchedule, RetryPolicy
+    from repro.traffic import TrafficGraph, TrafficNode, simulate_traffic
+
+    topo = TOPOS["2D-SW_SW"]
+    graph = TrafficGraph((
+        TrafficNode("head", request=CollectiveRequest("AR", 16 * MB),
+                    start_s=0.0),
+        TrafficNode("mid", request=CollectiveRequest("AR", 4 * MB),
+                    deps=("head",)),
+        TrafficNode("leaf", request=CollectiveRequest("AR", 4 * MB),
+                    deps=("mid",)),
+        TrafficNode("free", request=CollectiveRequest("AR", 4 * MB),
+                    start_s=0.0),
+    ))
+    faults = FaultSchedule(
+        events=(DimOutage(dim=1, start=5e-5),),   # permanent
+        retry=RetryPolicy(timeout_s=4e-5, backoff_s=2e-5, max_attempts=2))
+    out = {}
+    for eng in ("indexed", "reference"):
+        out[eng], _ = simulate_traffic(
+            topo, graph, chunks_per_collective=6, engine=eng,
+            check_invariants=True, faults=faults)
+    assert_same(out["indexed"], out["reference"])
+    failed = {g for g, _ in out["indexed"].failed_groups}
+    assert 0 in failed                          # the head exhausted retries
+    assert {1, 2} <= failed                     # the chain failed with it
+
+
+@pytest.mark.parametrize("arb_policy", ["weighted-fair", "strict-priority"])
+def test_dependency_release_survives_preempted_predecessor(arb_policy):
+    """Faults x arbiter preemption x deps: a predecessor whose service is
+    preempted (and re-rated by a mid-flight degradation) still releases
+    its successors in lockstep across engines."""
+    from repro.faults import BwDegradation, FaultSchedule
+    from repro.traffic import simulate_traffic
+
+    rng = random.Random(41)
+    topo = TOPOS["2D-SW_SW"]
+    graph = _rand_graph(rng, 12, tenants=("a", "b"))
+    specs = [TenantSpec("a", weight=1.0),
+             TenantSpec("b", weight=3.0, priority=2)]
+    faults = FaultSchedule(events=(
+        BwDegradation(dim=1, start=1e-4, end=8e-4, factor=0.2),
+        BwDegradation(dim=0, start=2e-4, end=6e-4, factor=0.5),
+    ))
+    out = {}
+    arbs = {}
+    for eng in ("indexed", "reference"):
+        arb = FabricArbiter(arb_policy, specs, quantum_chunks=3,
+                            preemption=True)
+        arbs[eng] = arb
+        out[eng], _ = simulate_traffic(
+            topo, graph, chunks_per_collective=6, arbiter=arb, engine=eng,
+            check_invariants=True, faults=faults)
+    assert_same(out["indexed"], out["reference"])
+    assert (arbs["indexed"].preempt_count
+            == arbs["reference"].preempt_count)

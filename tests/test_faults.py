@@ -1,0 +1,366 @@
+"""Tests for the fault-injection fabric (``repro.faults``): timeline
+validation, BW degradation / outage / flap / straggler semantics in both
+engines, retry + failure accounting, Themis re-planning under degraded
+bandwidth, and the tracer's fault-event round trip."""
+import math
+import random
+
+import pytest
+
+from repro.core.requests import CollectiveRequest
+from repro.core.chunking import Chunk
+from repro.core.simulator import simulate, simulate_requests
+from repro.faults import (
+    BwDegradation,
+    DimOutage,
+    FaultSchedule,
+    LinkFlap,
+    RetryPolicy,
+    StragglerBurst,
+    degraded_topology,
+    make_replanner,
+)
+from repro.obs import Tracer
+from repro.obs.tracer import parse_chrome_trace
+from repro.topology import make_table2_topologies
+
+TOPOS = make_table2_topologies()
+MB = 1e6
+
+
+def assert_same(res_idx, res_ref):
+    assert res_idx.diff_fields(res_ref) == []
+
+
+def _reqs(n=4, size=8.0 * MB, gap=2e-4):
+    return [CollectiveRequest("AR", size, issue_time=i * gap)
+            for i in range(n)]
+
+
+def _run(topo, reqs, eng, **kw):
+    res, _ = simulate_requests(topo, reqs, chunks_per_collective=8,
+                               engine=eng, check_invariants=True, **kw)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule validation
+# ---------------------------------------------------------------------------
+def test_event_window_validation():
+    with pytest.raises(ValueError, match="negative start"):
+        BwDegradation(dim=0, start=-1.0, end=1.0, factor=0.5)
+    with pytest.raises(ValueError, match="empty or inverted"):
+        BwDegradation(dim=0, start=1.0, end=1.0, factor=0.5)
+    with pytest.raises(ValueError, match="NaN"):
+        DimOutage(dim=0, start=float("nan"))
+    with pytest.raises(ValueError, match="factor"):
+        BwDegradation(dim=0, start=0.0, end=1.0, factor=0.0)
+    with pytest.raises(ValueError, match="factor"):
+        BwDegradation(dim=0, start=0.0, end=1.0, factor=1.5)
+    with pytest.raises(ValueError, match="sigma"):
+        StragglerBurst(dim=0, start=0.0, end=1.0, sigma=0.0)
+    with pytest.raises(ValueError, match="period_s"):
+        LinkFlap(dim=0, start=0.0, down_s=2.0, period_s=1.0, count=2)
+    with pytest.raises(ValueError, match="count"):
+        LinkFlap(dim=0, start=0.0, down_s=1.0, period_s=2.0, count=0)
+    with pytest.raises(ValueError, match="timeout_s"):
+        RetryPolicy(timeout_s=0.0)
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+
+
+def test_compile_rejects_out_of_range_dims_and_overlaps():
+    with pytest.raises(ValueError, match="out of range"):
+        FaultSchedule(events=(
+            BwDegradation(dim=5, start=0.0, end=1.0, factor=0.5),
+        )).compile(2)
+    # overlapping BW-family windows on one dim (degradation x outage)
+    with pytest.raises(ValueError, match="overlapping BW"):
+        FaultSchedule(events=(
+            BwDegradation(dim=0, start=0.0, end=1.0, factor=0.5),
+            DimOutage(dim=0, start=0.5, end=0.7),
+        )).compile(2)
+    # straggler bursts may not overlap each other...
+    with pytest.raises(ValueError, match="overlapping straggler"):
+        FaultSchedule(events=(
+            StragglerBurst(dim=0, start=0.0, end=1.0, sigma=0.1),
+            StragglerBurst(dim=0, start=0.5, end=2.0, sigma=0.2),
+        )).compile(2)
+    # ...but a burst may overlap a BW window, touching windows are fine,
+    # and different dims never conflict
+    flt = FaultSchedule(events=(
+        BwDegradation(dim=0, start=0.0, end=1.0, factor=0.5),
+        BwDegradation(dim=0, start=1.0, end=2.0, factor=0.25),
+        StragglerBurst(dim=0, start=0.5, end=1.5, sigma=0.1),
+        DimOutage(dim=1, start=0.5, end=0.7),
+    )).compile(2)
+    assert flt.num_dims == 2
+    assert [b.t for b in flt.boundaries] == sorted(
+        b.t for b in flt.boundaries)
+
+
+def test_retry_policy_backoff_grows():
+    rp = RetryPolicy(timeout_s=1.0, backoff_s=0.5, multiplier=2.0,
+                     jitter=0.0)
+    assert rp.delay(1) == pytest.approx(0.5)
+    assert rp.delay(3) == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# simulate() input validation (satellite)
+# ---------------------------------------------------------------------------
+def test_simulate_rejects_bad_issue_times_and_sizes():
+    topo = TOPOS["2D-SW_SW"]
+    from repro.core.scheduler import schedule_collective
+
+    chunks = schedule_collective(topo, "AR", 4 * MB, 4, "themis")
+    with pytest.raises(ValueError, match="issue_times"):
+        simulate(topo, [chunks], issue_times=[-1e-6])
+    with pytest.raises(ValueError, match="issue_times"):
+        simulate(topo, [chunks], issue_times=[float("nan")])
+    bad = [Chunk(index=0, size_bytes=float("nan"))]
+    with pytest.raises(ValueError, match="size_bytes"):
+        simulate(topo, [bad])
+
+
+def test_simulate_rejects_inconsistent_fault_arguments():
+    topo = TOPOS["2D-SW_SW"]
+    faults = FaultSchedule(events=(
+        BwDegradation(dim=0, start=1e-4, end=1.0, factor=0.5),))
+    with pytest.raises(ValueError, match="replanner requires faults"):
+        simulate(topo, [], replanner=lambda now, f, p: {})
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        simulate(topo, [], faults=faults, enforced_order=[[] for _ in
+                                                          topo.dims])
+    with pytest.raises(ValueError, match="compiled for"):
+        simulate(topo, [], faults=faults.compile(3))
+    with pytest.raises(ValueError, match="replan=True requires faults"):
+        simulate_requests(topo, _reqs(1), replan=True)
+
+
+# ---------------------------------------------------------------------------
+# Degradation / outage / straggler semantics, differentially
+# ---------------------------------------------------------------------------
+def test_degradation_slows_run_and_engines_agree():
+    topo = TOPOS["2D-SW_SW"]
+    reqs = _reqs()
+    clean = _run(topo, reqs, "indexed")
+    faults = FaultSchedule(events=(
+        BwDegradation(dim=1, start=1e-4, end=1.0, factor=0.25),))
+    ri = _run(topo, reqs, "indexed", faults=faults)
+    rr = _run(topo, reqs, "reference", faults=faults)
+    assert_same(ri, rr)
+    assert ri.makespan > clean.makespan        # it got slower...
+    assert not ri.failed_groups                # ...but everything finished
+    # bytes conservation across re-rating is asserted by the armed
+    # sanitizer; spot-check the accounting is unchanged
+    assert ri.dim_wire_bytes == pytest.approx(clean.dim_wire_bytes)
+
+
+def test_degradation_that_ends_mid_run_rerates_back_up():
+    topo = TOPOS["2D-SW_SW"]
+    reqs = _reqs()
+    forever = FaultSchedule(events=(
+        BwDegradation(dim=1, start=1e-4, end=1.0, factor=0.25),))
+    brief = FaultSchedule(events=(
+        BwDegradation(dim=1, start=1e-4, end=4e-4, factor=0.25),))
+    res_forever = _run(topo, reqs, "indexed", faults=forever)
+    res_brief_i = _run(topo, reqs, "indexed", faults=brief)
+    res_brief_r = _run(topo, reqs, "reference", faults=brief)
+    assert_same(res_brief_i, res_brief_r)
+    assert res_brief_i.makespan < res_forever.makespan
+
+
+def test_outage_retries_then_recovers():
+    topo = TOPOS["2D-SW_SW"]
+    reqs = _reqs()
+    faults = FaultSchedule(
+        events=(DimOutage(dim=1, start=1e-4, end=6e-4),),
+        retry=RetryPolicy(timeout_s=5e-5, backoff_s=2e-5, max_attempts=10))
+    ri = _run(topo, reqs, "indexed", faults=faults)
+    rr = _run(topo, reqs, "reference", faults=faults)
+    assert_same(ri, rr)
+    assert sum(ri.group_retries) > 0           # timeouts fired
+    assert not ri.failed_groups                # but the outage ended in time
+    assert len(ri.group_finish) == len(reqs)
+
+
+def test_permanent_outage_exhausts_retries_and_fails_groups():
+    topo = TOPOS["2D-SW_SW"]
+    reqs = _reqs()
+    faults = FaultSchedule(
+        events=(DimOutage(dim=1, start=1e-4),),   # end=inf: never recovers
+        retry=RetryPolicy(timeout_s=5e-5, backoff_s=2e-5, max_attempts=3))
+    ri = _run(topo, reqs, "indexed", faults=faults)
+    rr = _run(topo, reqs, "reference", faults=faults)
+    assert_same(ri, rr)
+    assert ri.failed_groups                     # retry exhaustion
+    for g, t in ri.failed_groups:
+        assert 0 <= g < len(reqs) and t >= 1e-4
+        assert ri.group_retries[g] >= 3
+
+
+def test_straggler_burst_is_deterministic_and_engines_agree():
+    topo = TOPOS["2D-SW_SW"]
+    reqs = _reqs()
+    faults = FaultSchedule(events=(
+        StragglerBurst(dim=0, start=0.0, end=1.0, sigma=0.5),))
+    a = _run(topo, reqs, "indexed", faults=faults)
+    b = _run(topo, reqs, "indexed", faults=faults)
+    assert_same(a, b)                           # same seed -> same draws
+    r = _run(topo, reqs, "reference", faults=faults)
+    assert_same(a, r)
+    clean = _run(topo, reqs, "indexed")
+    assert a.makespan != clean.makespan
+
+
+def test_link_flap_outage_windows_fire_in_sequence():
+    topo = TOPOS["2D-SW_SW"]
+    reqs = _reqs(6)
+    faults = FaultSchedule(
+        events=(LinkFlap(dim=1, start=1e-4, down_s=5e-5, period_s=3e-4,
+                         count=3),),
+        retry=RetryPolicy(timeout_s=3e-5, backoff_s=2e-5, max_attempts=20))
+    ri = _run(topo, reqs, "indexed", faults=faults)
+    rr = _run(topo, reqs, "reference", faults=faults)
+    assert_same(ri, rr)
+    assert not ri.failed_groups
+
+
+# ---------------------------------------------------------------------------
+# Re-planning under degraded bandwidth
+# ---------------------------------------------------------------------------
+def test_degraded_topology_scales_link_bw():
+    topo = TOPOS["2D-SW_SW"]
+    deg = degraded_topology(topo, [1.0, 0.25])
+    assert deg.num_dims == topo.num_dims
+    assert deg.dims[0].link_gbps == pytest.approx(topo.dims[0].link_gbps)
+    assert deg.dims[1].link_gbps == pytest.approx(
+        0.25 * topo.dims[1].link_gbps)
+    # a fully-dead dim is floored, not zeroed (latency math stays finite)
+    floored = degraded_topology(topo, [0.0, 1.0])
+    assert floored.dims[0].link_gbps > 0
+
+
+def test_replanning_beats_no_replanning_under_degradation():
+    """The paper's Algorithm-1 payoff: re-ordering RS/AG stages against
+    post-fault BW places the slow dim where chunks are smallest."""
+    topo = TOPOS["2D-SW_SW"]
+    reqs = [CollectiveRequest("AR", float(1 << 26), issue_time=i * 1e-4)
+            for i in range(6)]
+    faults = FaultSchedule(events=(
+        BwDegradation(dim=1, start=1.5e-4, end=1.0, factor=0.1),))
+
+    def run(eng, replan):
+        res, _ = simulate_requests(
+            topo, reqs, chunks_per_collective=16, engine=eng,
+            check_invariants=True, faults=faults, replan=replan)
+        return res
+
+    plain = run("indexed", False)
+    replanned_i = run("indexed", True)
+    replanned_r = run("reference", True)
+    assert_same(replanned_i, replanned_r)
+    assert plain.makespan / replanned_i.makespan > 1.15
+
+
+def test_make_replanner_reschedules_pending_groups():
+    topo = TOPOS["2D-SW_SW"]
+    from repro.core.scheduler import schedule_collective
+
+    chunks = schedule_collective(topo, "AR", float(1 << 24), 8, "themis")
+    rp = make_replanner(topo, "themis")
+    out = rp(1e-4, [1.0, 0.1], [(0, 2e-4, chunks)])
+    assert set(out) == {0}
+    assert len(out[0]) == len(chunks)
+    for oc, nc in zip(chunks, out[0]):
+        assert nc.size_bytes == oc.size_bytes
+        assert len(nc.schedule) == len(oc.schedule)
+
+
+def test_replan_against_empty_pending_is_noop():
+    rp = make_replanner(TOPOS["2D-SW_SW"], "themis")
+    assert rp(0.0, [0.5, 1.0], []) == {}
+
+
+# ---------------------------------------------------------------------------
+# Tracer round trip
+# ---------------------------------------------------------------------------
+def test_tracer_records_fault_events_and_chrome_roundtrip(tmp_path):
+    topo = TOPOS["2D-SW_SW"]
+    reqs = _reqs(6)
+    faults = FaultSchedule(
+        events=(BwDegradation(dim=1, start=1e-4, end=5e-4, factor=0.25),
+                DimOutage(dim=0, start=2e-4, end=5e-4),),
+        retry=RetryPolicy(timeout_s=5e-5, backoff_s=2e-5, max_attempts=10))
+    trc = Tracer()
+    res, _ = simulate_requests(
+        topo, reqs, chunks_per_collective=8, engine="indexed",
+        check_invariants=True, faults=faults, replan=True, tracer=trc)
+    counts = trc.event_counts()
+    assert counts["faults"] >= 4                # two windows = four edges
+    assert counts["retries"] == sum(res.group_retries)
+    assert counts["replans"] >= 1
+    path = tmp_path / "faults.trace.json"
+    trc.save(path)
+    parsed = parse_chrome_trace(path)
+    for key in ("faults", "retries", "replans", "aborts", "rerates",
+                "group_fails"):
+        assert parsed[key] == counts[key], key
+
+
+def test_tracer_counts_group_failures():
+    topo = TOPOS["2D-SW_SW"]
+    reqs = _reqs()
+    faults = FaultSchedule(
+        events=(DimOutage(dim=1, start=1e-4),),
+        retry=RetryPolicy(timeout_s=5e-5, backoff_s=2e-5, max_attempts=2))
+    trc = Tracer()
+    res, _ = simulate_requests(
+        topo, reqs, chunks_per_collective=8, engine="indexed",
+        faults=faults, tracer=trc)
+    assert trc.event_counts()["group_fails"] == len(res.failed_groups) > 0
+
+
+# ---------------------------------------------------------------------------
+# Fault-free identity + randomized chaos differential
+# ---------------------------------------------------------------------------
+def test_faults_none_is_the_default_path():
+    topo = TOPOS["2D-SW_SW"]
+    reqs = _reqs()
+    base = _run(topo, reqs, "indexed")
+    withkw = _run(topo, reqs, "indexed", faults=None)
+    assert_same(base, withkw)
+    assert base.group_retries == [] and base.failed_groups == []
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_chaos_differential_engines_agree(seed):
+    rng = random.Random(9000 + seed)
+    topo = TOPOS["2D-SW_SW"]
+    horizon = 2e-3
+    events = []
+    for dim in (0, 1):
+        t0 = rng.uniform(0.1, 0.5) * horizon
+        kind = rng.choice(("degrade", "outage", "burst"))
+        if kind == "degrade":
+            events.append(BwDegradation(
+                dim=dim, start=t0, end=t0 + 0.4 * horizon,
+                factor=rng.uniform(0.1, 0.8)))
+        elif kind == "outage":
+            events.append(DimOutage(dim=dim, start=t0,
+                                    end=t0 + 0.15 * horizon))
+        else:
+            events.append(StragglerBurst(
+                dim=dim, start=t0, end=t0 + 0.4 * horizon,
+                sigma=rng.uniform(0.05, 0.4)))
+    faults = FaultSchedule(
+        events=tuple(events),
+        retry=RetryPolicy(timeout_s=5e-5, backoff_s=2e-5,
+                          max_attempts=rng.choice((2, 10))))
+    reqs = [CollectiveRequest(
+        rng.choice(("AR", "RS", "AG")), rng.uniform(2, 20) * MB,
+        issue_time=rng.uniform(0, 1e-3)) for _ in range(8)]
+    ri = _run(topo, reqs, "indexed", faults=faults)
+    rr = _run(topo, reqs, "reference", faults=faults)
+    assert_same(ri, rr)

@@ -105,3 +105,50 @@ def test_tracer_rule_honors_lint_allow(tmp_path):
     src = ("def f(trc, dim):\n"
            "    trc.grant(dim)  # lint: allow\n")
     assert _violations(tmp_path, src) == []
+
+
+def test_flags_unguarded_fault_calls(tmp_path):
+    out = _violations(tmp_path, "def f(flt, dim, now):\n"
+                                "    flt.compile(2)\n")
+    assert len(out) == 1 and "unguarded fault-machinery call" in out[0]
+    out = _violations(tmp_path, "def f(flt_enq, task, now):\n"
+                                "    flt_enq(task, now)\n")
+    assert len(out) == 1 and "'flt_enq'" in out[0]
+    out = _violations(tmp_path, "def f(faults):\n"
+                                "    faults.compile(2)\n")
+    assert len(out) == 1
+
+
+def test_guarded_fault_calls_are_fine(tmp_path):
+    src = ("def f(flt, flt_enq, task, now):\n"
+           "    if flt is not None:\n"
+           "        flt_enq(task, now)\n")
+    assert _violations(tmp_path, src) == []
+    # the engines' nested-if pattern: fault-ish names may appear in an
+    # if-test only inside an already-guarded body
+    src = ("def f(flt, dim_down, dim, flt_recover, now):\n"
+           "    if flt is not None:\n"
+           "        if dim_down[dim]:\n"
+           "            flt_recover(dim, now)\n")
+    assert _violations(tmp_path, src) == []
+    # non-fault names are not subject to the rule
+    assert _violations(tmp_path, "def f(flow):\n    flow.emit(1)\n") == []
+
+
+def test_fault_and_tracer_guards_are_independent(tmp_path):
+    # a tracer guard does NOT license fault calls (and vice versa)
+    src = ("def f(trc, flt_enq, task, now):\n"
+           "    if trc is not None:\n"
+           "        flt_enq(task, now)\n")
+    out = _violations(tmp_path, src)
+    assert len(out) == 1 and "fault-machinery" in out[0]
+    src = ("def f(flt, trc, dim, now):\n"
+           "    if flt is not None:\n"
+           "        trc.fault(dim, now, 1.0, 0.0)\n")
+    out = _violations(tmp_path, src)
+    assert len(out) == 1 and "tracer" in out[0]
+    # a combined test guards both
+    src = ("def f(flt, trc, dim, now):\n"
+           "    if flt is not None and trc is not None:\n"
+           "        trc.fault(dim, now, 1.0, 0.0)\n")
+    assert _violations(tmp_path, src) == []

@@ -247,3 +247,38 @@ def test_preempted_service_records_match_engine_intervals():
         for rec, si in zip(trc.services[d], res.dim_services[d]):
             assert rec[0] == si.start and rec[1] == si.end
             assert math.isfinite(rec[5]) and rec[5] >= 0.0
+
+
+def test_windowed_series_survive_zero_capacity_dims():
+    """Satellite fix: a dim whose BW budget is zero (a full outage in a
+    fault run, or a degenerate topology) must yield 0.0 utilization and
+    shares, not a ZeroDivisionError."""
+    tl = BwTimeline(
+        num_dims=2,
+        makespan=1.0,
+        dim_bw=[0.0, 100.0],
+        dim_wire=[0.0, 50.0],
+        dim_busy=[0.0, 0.5],
+        activity=[[], [(0.0, 0.5)]],
+        services=[[], [[0.0, 0.5, [((0, 0), 0)], (0,), "t0", 50.0]]],
+        enqueues=[],
+    )
+    assert tl.dim_utilization(0) == 0.0
+    assert tl.dim_utilization(1) == pytest.approx(0.5)
+    per_dim = tl.per_dim_utilization(0.5)
+    assert per_dim[0] == [0.0, 0.0]
+    assert per_dim[1][0] == pytest.approx(1.0)
+    shares = tl.per_dim_shares(0.5)
+    assert all(v == 0.0 for v in shares["t0"][0])
+    assert shares["t0"][1][0] == pytest.approx(1.0)
+
+
+def test_windowed_series_survive_zero_width_final_window():
+    """A makespan that lands exactly on a window boundary produces a
+    zero-width final window in no case — but a zero makespan produces the
+    degenerate [(0, 0)] tiling, which must yield 0.0, not divide."""
+    tl = BwTimeline(
+        num_dims=1, makespan=0.0, dim_bw=[100.0], dim_wire=[0.0],
+        dim_busy=[0.0], activity=[[]], services=[[]], enqueues=[])
+    assert tl.per_dim_utilization(1.0) == [[0.0]]
+    assert tl.per_dim_shares(1.0) == {}

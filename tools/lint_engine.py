@@ -23,6 +23,14 @@ engine code:
     overhead when disabled*: every hook invocation in an engine hot loop
     must sit behind an ``if trc is not None``-style branch, so the
     disabled path costs one predictable branch per event and nothing else.
+  * **unguarded fault-machinery calls** — same contract for the
+    fault-injection fabric: any call on a fault-ish name (``faults`` or
+    ``flt*``: the compiled schedule handle and the engines' fault
+    closures) must sit behind an ``if``/conditional whose test mentions a
+    fault-ish name (the ``if flt is not None`` pattern).  The fault-free
+    path must stay byte-for-byte identical to pre-fault engines, so fault
+    hooks may never run — or even be evaluated in an ``if``-test — at an
+    unguarded level.
 
 A line ending in a ``# lint: allow`` comment is exempt (used where the
 construct is deliberate and documented, e.g. the exact-compare in the SMT
@@ -74,18 +82,22 @@ def _is_tracerish(name: str) -> bool:
     return name == "tracer" or name.startswith("trc")
 
 
-def _tracer_base(node: ast.expr) -> str | None:
-    """The tracer-ish base name of a call target, if any: ``trc_enq(...)``,
+def _is_faultish(name: str) -> bool:
+    return name == "faults" or name.startswith("flt")
+
+
+def _call_base(node: ast.expr, pred) -> str | None:
+    """The matching base name of a call target, if any: ``trc_enq(...)``,
     ``trc.service_start(...)``, ``tracer.enq_dims.append(...)`` -> name."""
     while isinstance(node, ast.Attribute):
         node = node.value
-    if isinstance(node, ast.Name) and _is_tracerish(node.id):
+    if isinstance(node, ast.Name) and pred(node.id):
         return node.id
     return None
 
 
-def _test_mentions_tracer(test: ast.expr) -> bool:
-    return any(isinstance(n, ast.Name) and _is_tracerish(n.id)
+def _test_mentions(test: ast.expr, pred) -> bool:
+    return any(isinstance(n, ast.Name) and pred(n.id)
                for n in ast.walk(test))
 
 
@@ -107,28 +119,37 @@ def lint_file(path: Path) -> list[str]:
         if not _allowed(line):
             out.append(f"{rel}:{node.lineno}: {msg}")
 
-    def check_guards(node: ast.AST, guarded: bool) -> None:
-        """Reject tracer-hook calls outside a tracer-conditional branch
-        (see module docstring: the zero-overhead-when-disabled contract)."""
+    def check_guards(node: ast.AST, trc_guarded: bool,
+                     flt_guarded: bool) -> None:
+        """Reject tracer-hook / fault-machinery calls outside a matching
+        conditional branch (see module docstring: the
+        zero-overhead-when-disabled contract, held separately per
+        subsystem)."""
         if isinstance(node, (ast.If, ast.IfExp)):
-            inner = guarded or _test_mentions_tracer(node.test)
-            check_guards(node.test, guarded)
+            inner_trc = trc_guarded or _test_mentions(node.test, _is_tracerish)
+            inner_flt = flt_guarded or _test_mentions(node.test, _is_faultish)
+            check_guards(node.test, trc_guarded, flt_guarded)
             body = node.body if isinstance(node.body, list) else [node.body]
             orelse = (node.orelse if isinstance(node.orelse, list)
                       else [node.orelse] if node.orelse is not None else [])
             for child in body + orelse:
-                check_guards(child, inner)
+                check_guards(child, inner_trc, inner_flt)
             return
         if isinstance(node, ast.Call):
-            base = _tracer_base(node.func)
-            if base is not None and not guarded:
+            base = _call_base(node.func, _is_tracerish)
+            if base is not None and not trc_guarded:
                 report(node, f"unguarded tracer call on {base!r} "
                        "(hot-loop hooks must sit behind an "
                        "'if <tracer> is not None' branch)")
+            base = _call_base(node.func, _is_faultish)
+            if base is not None and not flt_guarded:
+                report(node, f"unguarded fault-machinery call on {base!r} "
+                       "(fault hooks must sit behind an "
+                       "'if <faults> is not None' branch)")
         for child in ast.iter_child_nodes(node):
-            check_guards(child, guarded)
+            check_guards(child, trc_guarded, flt_guarded)
 
-    check_guards(tree, False)
+    check_guards(tree, False, False)
 
     for node in ast.walk(tree):
         if isinstance(node, ast.Compare):
