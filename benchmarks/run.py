@@ -22,6 +22,7 @@ def main() -> None:
     from benchmarks import (
         beyond_paper,
         faults_study,
+        fleet_study,
         kernels_bench,
         fig8_allreduce,
         fig9_activity,
@@ -54,6 +55,7 @@ def main() -> None:
         ("traffic", traffic_study),
         ("verify", verify_study),
         ("faults", faults_study),
+        ("fleet", fleet_study),
         ("insights", insights_study),
         ("beyond", beyond_paper),
         ("roofline", roofline_table),

@@ -95,6 +95,7 @@ def check_final(
     arbiter=None,
     served_base: dict | None = None,
     failed: frozenset | None = None,
+    shed: frozenset | None = None,
 ) -> None:
     """End-of-run conservation / ordering / attribution checks (both
     engines call this with their own state; see module docstring).
@@ -105,7 +106,14 @@ def check_final(
     wire conservation is restated over the ops that actually served (their
     per-row wire bytes must still sum to the engine's accounting — the
     conservation theorem holds across re-rating, aborts and retries).
+
+    ``shed`` — the groups the admission controller shed (demand-side
+    losses, ``repro.fleet``).  Same exemptions as ``failed``, plus the
+    progress checks: a shed group's stale ``group_finish`` entry is its
+    static issue time, which can sit on either side of the makespan (a
+    late-arriving request shed on arrival never advances the clock).
     """
+    dead = (failed or frozenset()) | (shed or frozenset())
     # -- every chunk stage served exactly once (bytes cannot vanish or
     #    duplicate across preemption splits) ------------------------------
     expected_wire = [0.0] * num_dims
@@ -137,13 +145,13 @@ def check_final(
         # abandoned by design; everywhere else a missing op is a lost chunk.
         lost = [op for op in expected_ops
                 if op not in served_count
-                and (not failed or op_group.get(op) not in failed)]
+                and (not dead or op_group.get(op) not in dead)]
         if lost:
             raise InvariantViolation(
                 f"[{engine}] {len(lost)} chunk stage(s) never served "
                 f"(lost chunks): {sorted(lost)[:8]}...")
-        if failed:
-            # Conservation over what actually drained: failed groups'
+        if dead:
+            # Conservation over what actually drained: failed/shed groups'
             # unserved stages moved no bytes, so the expectation is the sum
             # of served ops' wire bytes per dim.
             expected_wire = [0.0] * num_dims
@@ -185,6 +193,8 @@ def check_final(
 
     # -- progress: finishes cover issues, makespan covers finishes ---------
     for g, (fin, iss) in enumerate(zip(group_finish, resolved_issue)):
+        if dead and g in dead:
+            continue  # never finished; its finish entry is a stale default
         if fin < iss - max(_ABS_T, _REL * abs(iss)):
             raise InvariantViolation(
                 f"[{engine}] group {g} finished at {fin!r} before its "

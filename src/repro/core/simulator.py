@@ -179,6 +179,11 @@ class StreamStats:
     latency_p50: float = 0.0
     latency_p95: float = 0.0
     latency_p99: float = 0.0
+    # Groups that actually finished: ``n`` minus failed/shed members.  -1 is
+    # the legacy sentinel (no failure/shed accounting ran); a tag whose
+    # groups all died reports n_live=0 with zeroed latency/finish aggregates
+    # instead of NaN/IndexError.
+    n_live: int = -1
 
 
 @dataclass
@@ -199,6 +204,8 @@ class SimResult:
     # -- fault-injection accounting (populated only when faults= is given) ---
     failed_groups: list[tuple[int, float]] = field(default_factory=list)
     group_retries: list[int] = field(default_factory=list)
+    # -- admission/load-shedding accounting (only when admission= is given) --
+    shed_groups: list[tuple[int, float]] = field(default_factory=list)
 
     def avg_bw_utilization(self, topology: Topology) -> float:
         """Weighted average BW utilization (weights = per-dim BW budget).
@@ -240,27 +247,37 @@ class SimResult:
         for g, tag in enumerate(tags):
             members.setdefault(tag, []).append(g)
         wire = self.group_wire_bytes or [0.0] * len(tags)
+        # Failed (faults) and shed (admission) groups never finished —
+        # their stale finish==issue entries would read as zero latency and
+        # poison the percentiles, so latency/finish aggregate over live
+        # groups only.  A tag whose groups all died reports the explicit
+        # n_live=0 sentinel with zeroed aggregates (no NaN / IndexError).
+        dead = {g for g, _ in self.failed_groups}
+        dead.update(g for g, _ in self.shed_groups)
         out: dict[str, StreamStats] = {}
         for tag, gs in members.items():
+            live = [g for g in gs if g not in dead] if dead else gs
             # Pure compute groups (no wire moved) finish at their issue
             # instant; counting their zero latencies would drag a traffic
             # graph's per-tenant percentiles toward 0, so latency aggregates
             # only over wire-moving groups (all groups when none moved wire,
             # e.g. a compute-only stream or an untagged simulate() call).
-            lat_gs = [g for g in gs if wire[g] > 0] or gs
+            lat_gs = [g for g in live if wire[g] > 0] or live
             lat = [self.group_finish[g] - self.group_issue[g]
                    for g in lat_gs]
             lat_sorted = sorted(lat)
             out[tag] = StreamStats(
                 n=len(gs),
                 issue_first=min(self.group_issue[g] for g in gs),
-                finish=max(self.group_finish[g] for g in gs),
-                latency_mean=sum(lat) / len(lat),
-                latency_max=lat_sorted[-1],
+                finish=max(self.group_finish[g] for g in live)
+                if live else 0.0,
+                latency_mean=sum(lat) / len(lat) if lat else 0.0,
+                latency_max=lat_sorted[-1] if lat_sorted else 0.0,
                 wire_bytes=sum(wire[g] for g in gs),
                 latency_p50=_percentile(lat_sorted, 0.50),
                 latency_p95=_percentile(lat_sorted, 0.95),
                 latency_p99=_percentile(lat_sorted, 0.99),
+                n_live=len(live) if dead else -1,
             )
         return out
 
@@ -528,6 +545,7 @@ def simulate(
     tracer=None,
     faults=None,
     replanner=None,
+    admission=None,
 ) -> SimResult:
     """Simulate one or more collectives (``chunk_groups``).
 
@@ -621,6 +639,20 @@ def simulate(
         lists the not-yet-started groups; it returns re-planned chunk
         schedules computed against the degraded fabric, which the engine
         applies to those groups' un-issued work.  Requires ``faults``.
+    ``admission``: an admission controller / load shedder (see
+        :class:`repro.fleet.AdmissionController`) consulted at each
+        group's *first* ready event.  A shed group's queued chunks are
+        purged, its unstarted work never issues, and dependents it gates
+        are shed with it (shedding a request unit drops the whole unit);
+        outcomes land in ``SimResult.shed_groups`` — demand-side losses,
+        distinct from the fault fabric's ``failed_groups``.  The
+        controller is driven identically (same call sites, same event
+        order) by both engines and must consume no RNG, so admission
+        runs stay bit-identical indexed vs reference.  Requires
+        ``deps`` (admission units are dependency components); mutually
+        exclusive with ``enforced_order`` for the same deadlock reason
+        as faults.  ``None`` (default) is byte-for-byte the
+        admission-free engine.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; want {ENGINES}")
@@ -661,6 +693,15 @@ def simulate(
         raise ValueError("faults and enforced_order are mutually exclusive")
     if replanner is not None and faults is None:
         raise ValueError("replanner requires faults")
+    if admission is not None and deps is None:
+        # Admission units are weakly-connected dependency components; a
+        # dep-free run has no request structure to admit or shed.
+        raise ValueError("admission requires deps")
+    if admission is not None and enforced_order is not None:
+        # A shed group's ops never arrive; an enforced per-dim order would
+        # idle forever waiting its turn (same deadlock as faults).
+        raise ValueError("admission and enforced_order are mutually "
+                         "exclusive")
     flt = None
     if faults is not None:
         compile_fn = getattr(faults, "compile", None)
@@ -722,7 +763,8 @@ def simulate(
                 jitter=jitter, seed=seed, tenants=tenants, streams=streams,
                 arbiter=arbiter, penalty=penalty, task_arrays=task_arrays,
                 deps=deps, dep_delay=dep_delay_s, chk=check_invariants,
-                tracer=tracer, faults=flt, replanner=replanner)
+                tracer=tracer, faults=flt, replanner=replanner,
+                admission=admission)
     with reg.span("simulate.reference") if reg is not None else nullcontext():
         return _simulate_reference(
             topology, chunk_groups, issue_times=issue_times,
@@ -731,7 +773,7 @@ def simulate(
             jitter=jitter, seed=seed, tenants=tenants, streams=streams,
             arbiter=arbiter, penalty=penalty, deps=deps,
             dep_delay=dep_delay_s, chk=check_invariants, tracer=tracer,
-            faults=flt, replanner=replanner)
+            faults=flt, replanner=replanner, admission=admission)
 
 
 # ---------------------------------------------------------------------------
@@ -759,6 +801,7 @@ def _simulate_reference(
     tracer=None,
     faults=None,
     replanner=None,
+    admission=None,
 ) -> SimResult:
     import random
 
@@ -863,8 +906,8 @@ def _simulate_reference(
             work = [g0]
             while work:
                 g = work.pop()
-                if group_failed[g]:
-                    continue
+                if group_failed[g] or (adm is not None and group_shed[g]):
+                    continue  # a shed group's work is already gone
                 group_failed[g] = True
                 failed_log.append((g, now))
                 if trc is not None:
@@ -1012,6 +1055,7 @@ def _simulate_reference(
             # Deterministic, no seq/RNG — both engines stay in lockstep.
             pend = [g for g in range(n_groups)
                     if not group_started[g] and not group_failed[g]
+                    and (adm is None or not group_shed[g])
                     and chunk_groups[g]]
             if not pend:
                 return
@@ -1079,6 +1123,46 @@ def _simulate_reference(
             heapq.heappush(events, (flt_bounds[bi].t, next(seq),
                                     "fault", bi))
 
+    # -- admission control / load shedding (repro.fleet) ---------------------
+    # The controller is consulted at each group's *first* ready pop — ready
+    # pops are time-ordered and identical across engines, and the controller
+    # consumes no seq/RNG, so shed sets are bit-identical by construction.
+    # Victims are always pure queue residents (their unit never reached
+    # service), so shedding purges queues and skips future events — nothing
+    # in flight is ever cut.  When ``adm`` is None none of this state exists.
+    adm = admission
+    if adm is not None:
+        adm.begin(n_groups, "reference")
+        group_shed = [False] * n_groups
+        adm_started = [False] * n_groups   # first ready pop seen?
+        adm_first_svc = [False] * n_groups  # first service seen?
+        shed_log: list[tuple[int, float]] = []
+
+        def adm_apply(victims, now: float) -> None:
+            # Shed the victim groups, purge their queued chunks, and shed
+            # dependents transitively (a gated dependent can never issue).
+            work = list(victims)
+            while work:
+                g = work.pop()
+                if group_shed[g] or (flt is not None and group_failed[g]):
+                    continue
+                group_shed[g] = True
+                shed_log.append((g, now))
+                if trc is not None:
+                    trc.group_shed(g, now)
+                for d in range(num_dims):
+                    q = queues[d]
+                    kept = [t for t in q if t.group != g]
+                    if len(kept) != len(q):
+                        if flt is not None:
+                            # Invalidate any armed retry timeouts.
+                            for t in q:
+                                if t.group == g:
+                                    flt_ep[t.op_id] = (
+                                        flt_ep.get(t.op_id, 0) + 1)
+                        queues[d][:] = kept
+                work.extend(dep_children[g])
+
     use_deps = deps is not None
     if use_deps:
         # Dependency-gated release.  A group's chunks enter the event stream
@@ -1103,6 +1187,8 @@ def _simulate_reference(
             work = [(g, t)]
             while work:
                 gg, tt = work.pop(0)
+                if adm is not None:
+                    adm.on_finish(gg, tt)
                 for c in dep_children[gg]:
                     if trc is not None:
                         trc.dep_resolved(gg, c, tt)
@@ -1215,6 +1301,11 @@ def _simulate_reference(
         batch = select_batch(dim, now)
         if not batch:
             return
+        if adm is not None:
+            for t in batch:
+                if not adm_first_svc[t.group]:
+                    adm_first_svc[t.group] = True
+                    adm.on_serving(t.group, now)
         bw = topology.dims[dim].aggr_bw_bytes
         a = max(t.fixed_delay for t in batch)
         wire = sum(t.wire_bytes for t in batch)
@@ -1328,6 +1419,20 @@ def _simulate_reference(
             task: StageTask = payload  # type: ignore[assignment]
             if flt is not None and group_failed[task.group]:
                 continue  # abandoned work must not advance the makespan
+            if adm is not None:
+                g = task.group
+                if group_shed[g]:
+                    continue  # shed work must not advance the makespan
+                if not adm_started[g]:
+                    adm_started[g] = True
+                    victims = adm.on_ready(g, now)
+                    if victims is not None:
+                        if victims:
+                            adm_apply(victims, now)
+                        if group_shed[g]:
+                            continue  # the arrival itself was shed
+                        if trc is not None:
+                            trc.admit(g, now)
             makespan = max(makespan, now)
             if flt is not None:
                 group_started[task.group] = True
@@ -1375,6 +1480,8 @@ def _simulate_reference(
             for t in svc.batch:
                 if flt is not None and group_failed[t.group]:
                     continue  # failed mid-flight: chain abandoned
+                if adm is not None and group_shed[t.group]:
+                    continue  # shed mid-flight: chain abandoned
                 nxt = (t.chunk_id, t.stage_idx + 1)
                 if nxt in tasks:
                     push_ready(tasks[nxt], now)
@@ -1401,7 +1508,8 @@ def _simulate_reference(
 
     if use_deps:
         for g in range(n_groups):
-            if n_parents[g] > 0 and (flt is None or not group_failed[g]):
+            if (n_parents[g] > 0 and (flt is None or not group_failed[g])
+                    and (adm is None or not group_shed[g])):
                 raise ValueError(
                     f"dependency cycle: group {g} never became eligible")
         if group_finish:
@@ -1418,7 +1526,9 @@ def _simulate_reference(
             resolved_issue=resolved_issue, makespan=makespan,
             enforced=use_enforced, arbiter=arbiter, served_base=served_base,
             failed=(frozenset(g for g, _ in failed_log)
-                    if flt is not None else None))
+                    if flt is not None else None),
+            shed=(frozenset(g for g, _ in shed_log)
+                  if adm is not None else None))
 
     res = SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
                     dim_services, resolved_issue, group_finish,
@@ -1426,6 +1536,8 @@ def _simulate_reference(
     if flt is not None:
         res.failed_groups = failed_log
         res.group_retries = group_retries
+    if adm is not None:
+        res.shed_groups = shed_log
     if trc is not None:
         trc.finalize(res, topology)
     return res
@@ -1457,6 +1569,7 @@ def _simulate_indexed(
     tracer=None,
     faults=None,
     replanner=None,
+    admission=None,
 ) -> SimResult:
     """Same semantics as :func:`_simulate_reference`, near-linear cost.
 
@@ -1577,14 +1690,34 @@ def _simulate_indexed(
         t_arr[hh] = s
         heapq.heappush(events, (t, s, 0, hh))  # kind 0 = ready
 
+    # -- lazy queue deletion (shared by faults and admission) ----------------
+    # Queue membership under faults or admission uses lazy heap deletion:
+    # ``t_inq`` plus the arrival seq embedded in every heap entry decide
+    # whether an entry is alive (a purged/retried/shed handle's stale
+    # entries are skipped on pop).  When neither is armed none of this
+    # state exists and select_batch takes the branch-free fast path.
+    flt = faults
+    adm = admission
+    lazyq = (flt is not None) or (adm is not None)
+    if lazyq:
+        t_inq = [False] * n_tasks  # currently queued?
+        # Group -> contiguous handle range (build order groups handles).
+        group_h0 = [n_tasks] * n_groups
+        group_h1 = [0] * n_groups
+        for hh in range(n_tasks):
+            g = t_group[hh]
+            if hh < group_h0[g]:
+                group_h0[g] = hh
+            group_h1[g] = hh + 1
+
+        def q_alive(entry) -> bool:
+            hh = entry[-1]
+            return t_inq[hh] and entry[-2] == t_arr[hh]
+
     # -- fault injection (repro.faults) --------------------------------------
     # Mirrors the reference engine's fault block event-for-event (same seq
     # and RNG consumption order); when ``flt`` is None none of this state
-    # exists and the engine is byte-for-byte the pre-fault engine.  Queue
-    # membership under faults uses lazy heap deletion: ``t_inq`` plus the
-    # arrival seq embedded in every heap entry decide whether an entry is
-    # alive (a purged/retried handle's stale entries are skipped on pop).
-    flt = faults
+    # exists and the engine is byte-for-byte the pre-fault engine.
     if flt is not None:
         flt_retry = flt.retry
         flt_bounds = flt.boundaries
@@ -1597,15 +1730,6 @@ def _simulate_indexed(
         failed_log: list[tuple[int, float]] = []
         t_att = [0] * n_tasks      # retry attempts per op
         t_ep = [0] * n_tasks       # queue-residency epoch per op
-        t_inq = [False] * n_tasks  # currently queued?
-        # Group -> contiguous handle range (build order groups handles).
-        group_h0 = [n_tasks] * n_groups
-        group_h1 = [0] * n_groups
-        for hh in range(n_tasks):
-            g = t_group[hh]
-            if hh < group_h0[g]:
-                group_h0[g] = hh
-            group_h1[g] = hh + 1
         if replanner is not None:
             # Replanning rewrites stage tasks in place — copy the (possibly
             # shared/replayed) TaskArrays columns it touches.
@@ -1613,12 +1737,7 @@ def _simulate_indexed(
             t_wire = list(t_wire)
             t_fixed = list(t_fixed)
 
-        def flt_alive(entry) -> bool:
-            hh = entry[-1]
-            return t_inq[hh] and entry[-2] == t_arr[hh]
-
         def flt_enq(hh: int, now: float) -> None:
-            t_inq[hh] = True
             t_ep[hh] += 1
             if dim_down[t_dim[hh]]:
                 heapq.heappush(events, (now + flt_retry.timeout_s,
@@ -1631,7 +1750,7 @@ def _simulate_indexed(
                 entries = [e for heap in buckets[dim].values() for e in heap]
             else:
                 entries = heaps[dim]
-            out = [e[-1] for e in entries if flt_alive(e)]
+            out = [e[-1] for e in entries if q_alive(e)]
             out.sort(key=t_arr.__getitem__)
             return out
 
@@ -1639,8 +1758,8 @@ def _simulate_indexed(
             work = [g0]
             while work:
                 g = work.pop()
-                if group_failed[g]:
-                    continue
+                if group_failed[g] or (adm is not None and group_shed[g]):
+                    continue  # a shed group's work is already gone
                 group_failed[g] = True
                 failed_log.append((g, now))
                 if trc is not None:
@@ -1761,6 +1880,7 @@ def _simulate_indexed(
         def flt_replan(now: float) -> None:
             pend = [g for g in range(n_groups)
                     if not group_started[g] and not group_failed[g]
+                    and (adm is None or not group_shed[g])
                     and chunk_groups[g]]
             if not pend:
                 return
@@ -1824,6 +1944,37 @@ def _simulate_indexed(
         for bi in range(len(flt_bounds)):
             heapq.heappush(events, (flt_bounds[bi].t, next(seq), 3, bi))
 
+    # -- admission control / load shedding (repro.fleet) ---------------------
+    # Mirror of the reference engine's admission block (same call sites,
+    # same event order; the controller consumes no seq/RNG).  Shed purges
+    # flip ``t_inq`` (lazy heap deletion) instead of filtering queue lists.
+    if adm is not None:
+        adm.begin(n_groups, "indexed")
+        group_shed = [False] * n_groups
+        adm_started = [False] * n_groups   # first ready pop seen?
+        adm_first_svc = [False] * n_groups  # first service seen?
+        shed_log: list[tuple[int, float]] = []
+
+        def adm_apply(victims, now: float) -> None:
+            # Shed the victim groups, purge their queued chunks, and shed
+            # dependents transitively (a gated dependent can never issue).
+            work = list(victims)
+            while work:
+                g = work.pop()
+                if group_shed[g] or (flt is not None and group_failed[g]):
+                    continue
+                group_shed[g] = True
+                shed_log.append((g, now))
+                if trc is not None:
+                    trc.group_shed(g, now)
+                for hh in range(group_h0[g], group_h1[g]):
+                    if t_inq[hh]:
+                        t_inq[hh] = False
+                        qlen[t_dim[hh]] -= 1
+                        if flt is not None:
+                            t_ep[hh] += 1  # invalidate armed timeouts
+                work.extend(dep_children[g])
+
     use_deps = deps is not None
     if use_deps:
         # Dependency-gated release — mirrors the reference engine exactly
@@ -1843,6 +1994,8 @@ def _simulate_indexed(
             work = [(g, t)]
             while work:
                 gg, tt = work.pop(0)
+                if adm is not None:
+                    adm.on_finish(gg, tt)
                 for c in dep_children[gg]:
                     if trc is not None:
                         trc.dep_resolved(gg, c, tt)
@@ -1904,6 +2057,8 @@ def _simulate_indexed(
                            (-t_prio[hh], t_wire[hh], t_arr[hh], hh))
         else:
             heapq.heappush(heaps[dim], (-t_prio[hh], t_arr[hh], hh))
+        if lazyq:
+            t_inq[hh] = True
         if flt is not None:
             flt_enq(hh, now)
 
@@ -1912,12 +2067,12 @@ def _simulate_indexed(
             return []
         if use_arbiter:
             b = buckets[dim]
-            if flt is not None:
-                # Lazy deletion: drop stale heads (purged/retried handles)
-                # so the head-peek below only sees alive entries.
+            if lazyq:
+                # Lazy deletion: drop stale heads (purged/retried/shed
+                # handles) so the head-peek below only sees alive entries.
                 dead = []
                 for tn, heap in b.items():
-                    while heap and not flt_alive(heap[0]):
+                    while heap and not q_alive(heap[0]):
                         heapq.heappop(heap)
                     if not heap:
                         dead.append(tn)
@@ -1944,15 +2099,15 @@ def _simulate_indexed(
             heap = b[best_tn]
             batch = []
             while heap and len(batch) < arb_quantum:
-                if flt is not None:
-                    if not flt_alive(heap[0]):
+                if lazyq:
+                    if not q_alive(heap[0]):
                         heapq.heappop(heap)
                         continue
                 batch.append(heapq.heappop(heap)[-1])
             if not heap:
                 del b[best_tn]
             qlen[dim] -= len(batch)
-            if flt is not None:
+            if lazyq:
                 for hh in batch:
                     t_inq[hh] = False
             return batch
@@ -1982,8 +2137,8 @@ def _simulate_indexed(
             qlen[dim] -= len(batch)
             return batch
         heap = heaps[dim]
-        if flt is not None:
-            while heap and not flt_alive(heap[0]):
+        if lazyq:
+            while heap and not q_alive(heap[0]):
                 heapq.heappop(heap)
             if not heap:
                 return []
@@ -1993,15 +2148,15 @@ def _simulate_indexed(
             sat = t_fixed[h0] * dim_bw[dim]
             total = t_wire[h0]
             while heap and total < sat and len(batch) < fusion_limit:
-                if flt is not None:
-                    if not flt_alive(heap[0]):
+                if lazyq:
+                    if not q_alive(heap[0]):
                         heapq.heappop(heap)
                         continue
                 hh = heapq.heappop(heap)[-1]
                 batch.append(hh)
                 total += t_wire[hh]
         qlen[dim] -= len(batch)
-        if flt is not None:
+        if lazyq:
             for hh in batch:
                 t_inq[hh] = False
         return batch
@@ -2015,6 +2170,11 @@ def _simulate_indexed(
         batch = select_batch(dim, now)
         if not batch:
             return
+        if adm is not None:
+            for hh in batch:
+                if not adm_first_svc[t_group[hh]]:
+                    adm_first_svc[t_group[hh]] = True
+                    adm.on_serving(t_group[hh], now)
         a = 0.0
         wire = 0.0
         for hh in batch:
@@ -2117,6 +2277,20 @@ def _simulate_indexed(
             hh = payload
             if flt is not None and group_failed[t_group[hh]]:
                 continue  # abandoned work must not advance the makespan
+            if adm is not None:
+                g = t_group[hh]
+                if group_shed[g]:
+                    continue  # shed work must not advance the makespan
+                if not adm_started[g]:
+                    adm_started[g] = True
+                    victims = adm.on_ready(g, now)
+                    if victims is not None:
+                        if victims:
+                            adm_apply(victims, now)
+                        if group_shed[g]:
+                            continue  # the arrival itself was shed
+                        if trc is not None:
+                            trc.admit(g, now)
             if now > makespan:
                 makespan = now
             if flt is not None:
@@ -2159,6 +2333,8 @@ def _simulate_indexed(
             for hh in svc.batch:
                 if flt is not None and group_failed[t_group[hh]]:
                     continue  # failed mid-flight: chain abandoned
+                if adm is not None and group_shed[t_group[hh]]:
+                    continue  # shed mid-flight: chain abandoned
                 if not t_last[hh]:
                     push_ready(hh + 1, now)  # stages are contiguous handles
                     continue
@@ -2185,7 +2361,8 @@ def _simulate_indexed(
 
     if use_deps:
         for g in range(n_groups):
-            if n_parents[g] > 0 and (flt is None or not group_failed[g]):
+            if (n_parents[g] > 0 and (flt is None or not group_failed[g])
+                    and (adm is None or not group_shed[g])):
                 raise ValueError(
                     f"dependency cycle: group {g} never became eligible")
         if group_finish:
@@ -2204,13 +2381,17 @@ def _simulate_indexed(
             resolved_issue=resolved_issue, makespan=makespan,
             enforced=use_enforced, arbiter=arbiter, served_base=served_base,
             failed=(frozenset(g for g, _ in failed_log)
-                    if flt is not None else None))
+                    if flt is not None else None),
+            shed=(frozenset(g for g, _ in shed_log)
+                  if adm is not None else None))
     res = SimResult(makespan, dim_busy, dim_wire, activity, dim_order,
                     dim_services, resolved_issue, group_finish,
                     list(streams), list(tenants), group_wire)
     if flt is not None:
         res.failed_groups = failed_log
         res.group_retries = group_retries
+    if adm is not None:
+        res.shed_groups = shed_log
     if trc is not None:
         trc.finalize(res, topology)
     return res

@@ -1,0 +1,44 @@
+"""Overload-resilient serving fleet (beyond paper).
+
+The demand-side half of robustness: where ``repro.faults`` (PR 8)
+breaks the *fabric* mid-run, this package breaks the *load* — open-loop
+seeded arrival processes (Poisson / diurnal / MMPP-bursty / trace
+replay) feed ``serving_traffic`` request chains past saturation, an
+:class:`AdmissionController` in front of both engines sheds what the
+fabric cannot serve (``SimResult.shed_groups``, distinct from
+``failed_groups``), and :class:`~repro.tenancy.elastic.SloDebtArbiter`
+re-weights tenants from accumulated slowdown *debt* over a horizon
+instead of the instantaneous slo-aware boost.  ``benchmarks/
+fleet_study.py`` sweeps offered load through and past the knee.
+"""
+from repro.fleet.admission import (
+    ADMISSION_POLICIES,
+    AdmissionController,
+    calibrate_admission,
+    unit_of_group,
+)
+from repro.fleet.arrivals import (
+    ArrivalProcess,
+    DiurnalArrivals,
+    FleetTenant,
+    MMPPArrivals,
+    PoissonArrivals,
+    TraceArrivals,
+    fleet_tenant_specs,
+    fleet_traffic,
+)
+
+__all__ = [
+    "ADMISSION_POLICIES",
+    "AdmissionController",
+    "ArrivalProcess",
+    "DiurnalArrivals",
+    "FleetTenant",
+    "MMPPArrivals",
+    "PoissonArrivals",
+    "TraceArrivals",
+    "calibrate_admission",
+    "fleet_tenant_specs",
+    "fleet_traffic",
+    "unit_of_group",
+]

@@ -80,7 +80,7 @@ class Tracer:
     __slots__ = ("engine", "num_dims", "n_groups", "services", "grants",
                  "preempts", "enq_dims", "enq_times", "releases", "dep_edges",
                  "faults", "aborts", "rerates", "retries", "group_fails",
-                 "replans",
+                 "replans", "sheds", "admits",
                  "makespan", "dim_bw", "dim_wire", "dim_busy",
                  "dim_activity", "group_issue", "group_finish",
                  "group_streams", "group_tenants", "topology_name",
@@ -104,6 +104,9 @@ class Tracer:
         self.retries: list[tuple[int, tuple, float, int, float]] = []
         self.group_fails: list[tuple[int, float]] = []
         self.replans: list[tuple[float, tuple, tuple]] = []
+        # Admission events (populated only when simulate(admission=...)):
+        self.sheds: list[tuple[int, float]] = []
+        self.admits: list[tuple[int, float]] = []
         # finalize() snapshots:
         self.makespan = 0.0
         self.dim_bw: list[float] = []
@@ -198,6 +201,17 @@ class Tracer:
         chunk schedules against per-dim BW ``factors``."""
         self.replans.append((t, groups, factors))
 
+    # -- admission hooks (armed only via simulate(admission=...)) ------------
+    def group_shed(self, group: int, t: float) -> None:
+        """The admission controller shed ``group`` (demand-side loss —
+        distinct from ``group_failed``, which is a fabric-side loss)."""
+        self.sheds.append((group, t))
+
+    def admit(self, group: int, t: float) -> None:
+        """The admission controller admitted ``group``'s unit at its first
+        ready event (recorded once per unit, on the deciding group)."""
+        self.admits.append((group, t))
+
     def dep_resolved(self, parent: int, child: int, t: float) -> None:
         self.dep_edges.append((parent, child, t))
 
@@ -263,6 +277,8 @@ class Tracer:
             "retries": len(self.retries),
             "group_fails": len(self.group_fails),
             "replans": len(self.replans),
+            "sheds": len(self.sheds),
+            "admits": len(self.admits),
             "groups": self.n_groups,
         }
 
@@ -400,6 +416,15 @@ class Tracer:
                         "cat": "replan",
                         "args": {"groups": list(groups),
                                  "bw_factors": list(factors)}})
+        # Admission instants: shed / admitted requests on their lanes.
+        for (g, t) in self.sheds:
+            evs.append({"ph": "i", "pid": 0, "tid": group_tid.get(g, 0),
+                        "ts": t * M, "s": "t", "name": f"g{g} shed",
+                        "cat": "shed", "args": {"group": g}})
+        for (g, t) in self.admits:
+            evs.append({"ph": "i", "pid": 0, "tid": group_tid.get(g, 0),
+                        "ts": t * M, "s": "t", "name": f"g{g} admitted",
+                        "cat": "admit", "args": {"group": g}})
         return {"traceEvents": evs, "displayTimeUnit": "ms",
                 "otherData": {"engine": self.engine,
                               "topology": self.topology_name,
@@ -419,7 +444,7 @@ def parse_chrome_trace(source) -> dict[str, Any]:
     Returns ``{"groups": n, "services_per_dim": {dim: n}, "services": n,
     "preempts": n, "grants": n, "flows": n, "dims": n, "faults": n,
     "aborts": n, "rerates": n, "retries": n, "group_fails": n,
-    "replans": n}``.
+    "replans": n, "sheds": n, "admits": n}``.
     """
     if isinstance(source, dict):
         obj = source
@@ -430,6 +455,7 @@ def parse_chrome_trace(source) -> dict[str, Any]:
     per_dim: dict[int, int] = {}
     preempts = grants = flows = 0
     faults = aborts = rerates = retries = group_fails = replans = 0
+    sheds = admits = 0
     for ev in obj["traceEvents"]:
         cat = ev.get("cat")
         if cat == "group":
@@ -455,10 +481,14 @@ def parse_chrome_trace(source) -> dict[str, Any]:
             group_fails += 1
         elif cat == "replan":
             replans += 1
+        elif cat == "shed":
+            sheds += 1
+        elif cat == "admit":
+            admits += 1
     return {"groups": groups, "services_per_dim": per_dim,
             "services": sum(per_dim.values()), "preempts": preempts,
             "grants": grants, "flows": flows,
             "faults": faults, "aborts": aborts, "rerates": rerates,
             "retries": retries, "group_fails": group_fails,
-            "replans": replans,
+            "replans": replans, "sheds": sheds, "admits": admits,
             "dims": (max(per_dim) + 1) if per_dim else 0}

@@ -10,6 +10,7 @@ cross-tenant Themis mode shares one fabric-wide Dim Load Tracker so every
 tenant's chunk orders steer around the other tenants' residual loads.
 """
 from repro.tenancy.arbiter import ARBITER_POLICIES, FabricArbiter
+from repro.tenancy.elastic import SloDebtArbiter
 from repro.tenancy.fabric import (
     isolated_latencies,
     schedule_tenant_requests,
@@ -33,6 +34,7 @@ from repro.tenancy.tenants import (
 __all__ = [
     "ARBITER_POLICIES",
     "FabricArbiter",
+    "SloDebtArbiter",
     "TenantJob",
     "TenantReport",
     "TenantSpec",

@@ -216,6 +216,7 @@ def serving_traffic(
     prefill_ops: int = 4,
     collective: str = "AG",
     name: str = "serve",
+    arrival_times: "list[float] | None" = None,
 ) -> TrafficGraph:
     """Serving prefill/decode chains.
 
@@ -227,7 +228,17 @@ def serving_traffic(
     ``decode_s`` of per-token compute.  Decode comm latency percentiles
     (``SimResult.stream_stats()['decode'].latency_p99``) are the serving
     SLO metric.
+
+    ``arrival_times`` switches the fixed-gap arrival grid to an explicit
+    per-request timestamp list (the open-loop fleet path: seeded arrival
+    processes from ``repro.fleet`` hand their draws in here).  When
+    given, it overrides ``n_requests``/``arrival_gap_s``/``start_s``.
     """
+    if arrival_times is not None:
+        arrival_times = list(arrival_times)
+        if not arrival_times:
+            raise ValueError("arrival_times must be non-empty")
+        n_requests = len(arrival_times)
     if gen_tokens < 0 or n_requests < 1:
         raise ValueError("gen_tokens must be >= 0, n_requests >= 1")
     ops = max(1, prefill_ops)
@@ -235,8 +246,10 @@ def serving_traffic(
     for r in range(n_requests):
         base = f"{name}/r{r}"
         gate = f"{base}/prefill-compute"
+        arrive = (arrival_times[r] if arrival_times is not None
+                  else start_s + r * arrival_gap_s)
         nodes.append(TrafficNode(gate, compute_s=prefill_s,
-                                 start_s=start_s + r * arrival_gap_s,
+                                 start_s=arrive,
                                  stream="prefill-compute"))
         burst = []
         for j in range(ops):

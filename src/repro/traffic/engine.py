@@ -93,6 +93,7 @@ def simulate_traffic(
     tracer=None,
     faults=None,
     replan: bool = False,
+    admission=None,
 ) -> tuple[SimResult, list[list[Chunk]]]:
     """Schedule and simulate a traffic graph — the dependency-aware
     counterpart of ``simulate_requests``.
@@ -104,6 +105,11 @@ def simulate_traffic(
     ``faults`` (a :class:`repro.faults.FaultSchedule`) injects a fault
     timeline; ``replan=True`` additionally arms Themis graceful
     degradation (re-plan un-issued chunks at each BW fault boundary).
+
+    ``admission`` (a :class:`repro.fleet.AdmissionController`) puts an
+    admission/shedding gate in front of the engines — shed requests land
+    in ``SimResult.shed_groups`` (traffic graphs always carry deps, the
+    admission prerequisite).
 
     The returned ``SimResult`` is indexed like ``graph.nodes``:
     ``group_issue`` holds each node's *resolved* issue time, so
@@ -128,6 +134,6 @@ def simulate_traffic(
         topology, groups, intra=intra, fusion=fusion, jitter=jitter,
         seed=seed, arbiter=arbiter, preempt_penalty_s=preempt_penalty_s,
         engine=engine, check_invariants=check_invariants, tracer=tracer,
-        faults=faults, replanner=replanner,
+        faults=faults, replanner=replanner, admission=admission,
         **graph.sim_kwargs())
     return res, groups

@@ -869,3 +869,136 @@ def test_dependency_release_survives_preempted_predecessor(arb_policy):
     assert_same(out["indexed"], out["reference"])
     assert (arbs["indexed"].preempt_count
             == arbs["reference"].preempt_count)
+
+
+# ---------------------------------------------------------------------------
+# Serving fleet (repro.fleet): open-loop arrivals + admission control
+# ---------------------------------------------------------------------------
+_FLEET_COSTS = dict(prefill_bytes=2e9, decode_bytes=64e6,
+                    prefill_s=5e-3, decode_s=2e-4, prefill_ops=2)
+
+
+def _fleet_graph(rate=250.0, horizon=0.2, seed=5):
+    from repro.fleet import FleetTenant, MMPPArrivals, PoissonArrivals
+    from repro.fleet import fleet_traffic
+
+    tenants = [
+        FleetTenant("web", PoissonArrivals(rate, seed=seed),
+                    serving=dict(gen_tokens=6, **_FLEET_COSTS), weight=2.0),
+        FleetTenant("batch",
+                    MMPPArrivals((0.2 * rate, 2.0 * rate), (0.04, 0.04),
+                                 seed=seed + 1),
+                    serving=dict(gen_tokens=4, **_FLEET_COSTS), priority=-1),
+    ]
+    return fleet_traffic(tenants, horizon_s=horizon)
+
+
+def test_arrival_processes_are_seed_deterministic_and_restateable():
+    """Same seed -> bit-identical draws, both across fresh instances and
+    across repeated times() calls on one instance (the generators keep no
+    RNG state between calls)."""
+    from repro.fleet import DiurnalArrivals, MMPPArrivals, PoissonArrivals
+
+    procs = [
+        PoissonArrivals(120.0, seed=3),
+        DiurnalArrivals(120.0, amplitude=0.7, period_s=0.5, seed=4),
+        MMPPArrivals((40.0, 400.0), (0.05, 0.02), seed=5),
+    ]
+    for p in procs:
+        a = p.times(horizon_s=0.4)
+        assert a == p.times(horizon_s=0.4)          # re-callable
+        assert all(t2 > t1 for t1, t2 in zip(a, a[1:]))
+    assert (PoissonArrivals(120.0, seed=3).times(horizon_s=0.4)
+            != PoissonArrivals(120.0, seed=9).times(horizon_s=0.4))
+
+
+def test_fleet_traffic_is_bit_identical_across_engines():
+    from repro.traffic import simulate_traffic
+
+    graph = _fleet_graph()
+    assert graph.nodes == _fleet_graph().nodes      # graph build determinism
+    ri, _ = simulate_traffic(TOPOS["2D-SW_SW"], graph, engine="indexed",
+                             check_invariants=True)
+    rr, _ = simulate_traffic(TOPOS["2D-SW_SW"], graph, engine="reference",
+                             check_invariants=True)
+    assert_same(ri, rr)
+
+
+@pytest.mark.parametrize("adm_policy", ["reject-newest",
+                                        "shed-lowest-priority",
+                                        "deadline-aware"])
+def test_engines_agree_under_admission_control(adm_policy):
+    """Overload scenarios that genuinely shed must stay bit-identical
+    indexed vs reference with the sanitizer armed — including the shed
+    log itself (covered by diff_fields)."""
+    from repro.fleet import AdmissionController, unit_of_group
+    from repro.traffic import simulate_traffic
+
+    graph = _fleet_graph(rate=350.0)
+    uo, up = unit_of_group(graph)
+    kw = dict(policy=adm_policy, capacity=3, unit_priority=up)
+    if adm_policy == "deadline-aware":
+        kw.update(deadline_s=0.05, est_service_s=0.01)
+    out = {}
+    for eng in ("indexed", "reference"):
+        adm = AdmissionController(uo, **kw)
+        out[eng], _ = simulate_traffic(
+            TOPOS["2D-SW_SW"], graph, engine=eng, admission=adm,
+            check_invariants=True)
+        assert adm.n_shed > 0                      # overload engaged it
+    assert_same(out["indexed"], out["reference"])
+    assert out["indexed"].shed_groups              # first-class shed log
+
+
+def test_admission_decisions_invariant_under_tracer():
+    """Arming the flight recorder must not move a single admission
+    decision (hooks append only; no seq/RNG consumption), and the trace
+    must record every shed and one admit per admitted unit."""
+    from repro.fleet import AdmissionController, unit_of_group
+    from repro.obs import Tracer
+    from repro.traffic import simulate_traffic
+
+    graph = _fleet_graph(rate=350.0)
+    uo, _up = unit_of_group(graph)
+    for eng in ("indexed", "reference"):
+        adm = AdmissionController(uo, policy="reject-newest", capacity=3)
+        plain, _ = simulate_traffic(TOPOS["2D-SW_SW"], graph, engine=eng,
+                                    admission=adm)
+        adm_t = AdmissionController(uo, policy="reject-newest", capacity=3)
+        trc = Tracer()
+        traced, _ = simulate_traffic(TOPOS["2D-SW_SW"], graph, engine=eng,
+                                     admission=adm_t, tracer=trc)
+        assert_same(plain, traced)
+        assert adm_t.n_shed == adm.n_shed
+        assert adm_t.shed_units == adm.shed_units
+        assert len(trc.sheds) == len(traced.shed_groups)
+        assert len(trc.admits) == adm_t.n_admitted
+        counts = trc.event_counts()
+        assert counts["sheds"] == len(trc.sheds)
+        assert counts["admits"] == len(trc.admits)
+
+
+def test_admission_composes_with_faults_across_engines():
+    """Overload x outage: demand-side sheds and fabric-side retries in
+    one run, bit-identical across engines with the sanitizer armed, and
+    the two loss ledgers stay disjoint."""
+    from repro.faults import DimOutage, FaultSchedule, RetryPolicy
+    from repro.fleet import AdmissionController, unit_of_group
+    from repro.traffic import simulate_traffic
+
+    graph = _fleet_graph(rate=350.0)
+    uo, _up = unit_of_group(graph)
+    faults = FaultSchedule(
+        events=(DimOutage(dim=1, start=0.03, end=0.06),),
+        retry=RetryPolicy(timeout_s=0.02, backoff_s=0.005, max_attempts=6))
+    out = {}
+    for eng in ("indexed", "reference"):
+        adm = AdmissionController(uo, policy="reject-newest", capacity=3)
+        out[eng], _ = simulate_traffic(
+            TOPOS["2D-SW_SW"], graph, engine=eng, admission=adm,
+            faults=faults, check_invariants=True)
+    assert_same(out["indexed"], out["reference"])
+    res = out["indexed"]
+    assert res.shed_groups and sum(res.group_retries) > 0
+    shed = {g for g, _ in res.shed_groups}
+    assert shed.isdisjoint({g for g, _ in res.failed_groups})

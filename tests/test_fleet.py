@@ -1,0 +1,364 @@
+"""Serving-fleet unit tests: arrival processes, the admission
+controller's policy logic, shed-aware stream stats, the SLO-debt
+arbiter's integrator, and the observe→actuate calibration helper.
+
+Engine-level differential coverage (both engines, sanitizer, tracer
+invariance, fault composition) lives in ``test_engine_equiv.py``; this
+file pins the fleet layer's own semantics.
+"""
+import math
+
+import pytest
+
+from repro.fleet import (
+    ADMISSION_POLICIES,
+    AdmissionController,
+    DiurnalArrivals,
+    FleetTenant,
+    MMPPArrivals,
+    PoissonArrivals,
+    TraceArrivals,
+    calibrate_admission,
+    fleet_tenant_specs,
+    fleet_traffic,
+    unit_of_group,
+)
+from repro.tenancy import SloDebtArbiter, TenantSpec
+from repro.topology import make_table2_topologies
+
+TOPO = make_table2_topologies()["2D-SW_SW"]
+COSTS = dict(prefill_bytes=64e6, decode_bytes=2e6,
+             prefill_s=1e-3, decode_s=1e-4, prefill_ops=2, gen_tokens=3)
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+def test_arrival_bounds_validation():
+    p = PoissonArrivals(10.0)
+    with pytest.raises(ValueError, match="needs n=, horizon_s="):
+        p.times()
+    with pytest.raises(ValueError, match="n must be >= 0"):
+        p.times(n=-1)
+    with pytest.raises(ValueError, match="horizon_s must be >= 0"):
+        p.times(horizon_s=-1.0)
+    with pytest.raises(ValueError, match="rate_rps must be > 0"):
+        PoissonArrivals(0.0)
+    assert p.times(n=0) == []
+    assert len(p.times(n=5)) == 5
+    assert all(t <= 2.0 for t in p.times(horizon_s=2.0))
+
+
+def test_poisson_mean_rate_is_plausible():
+    # 2000 expected arrivals: the realized rate must sit within ~10%.
+    ts = PoissonArrivals(100.0, seed=1).times(horizon_s=20.0)
+    assert len(ts) == pytest.approx(2000, rel=0.1)
+
+
+def test_diurnal_rate_modulation_and_validation():
+    with pytest.raises(ValueError, match="amplitude"):
+        DiurnalArrivals(10.0, amplitude=1.0)
+    d = DiurnalArrivals(100.0, amplitude=0.9, period_s=4.0, seed=2)
+    assert d.rate_at(1.0) == pytest.approx(190.0)   # sin peak
+    assert d.rate_at(3.0) == pytest.approx(10.0)    # sin trough
+    ts = d.times(horizon_s=40.0)
+    # Arrivals concentrate in peak half-cycles: count arrivals with
+    # instantaneous rate above vs below the mean.
+    hi = sum(1 for t in ts if d.rate_at(t) > 100.0)
+    assert hi / len(ts) > 0.7
+
+
+def test_mmpp_burstiness_and_validation():
+    with pytest.raises(ValueError, match=">= 2 states"):
+        MMPPArrivals((10.0,), (1.0,))
+    with pytest.raises(ValueError, match="entries for"):
+        MMPPArrivals((10.0, 20.0), (1.0,))
+    with pytest.raises(ValueError, match="at least one state rate"):
+        MMPPArrivals((0.0, 0.0), (1.0, 1.0))
+    m = MMPPArrivals((5.0, 500.0), (0.5, 0.5), seed=3)
+    ts = m.times(horizon_s=20.0)
+    # A 100x rate ratio with equal dwell: inter-arrival gaps are strongly
+    # bimodal; the count sits well above the calm-only expectation and
+    # well below the burst-only one.
+    assert 0.3 * 20 * 5 < len(ts) < 20 * 500
+    gaps = sorted(b - a for a, b in zip(ts, ts[1:]))
+    assert gaps[len(gaps) // 10] < 0.01              # bursty clumps exist
+    assert sum(1 for x in gaps if x > 0.05) >= 10    # so do calm stretches
+
+
+def test_mmpp_silent_state_produces_gaps():
+    m = MMPPArrivals((0.0, 200.0), (0.1, 0.1), seed=4)
+    ts = m.times(horizon_s=2.0)
+    assert ts                                 # burst states still emit
+    gaps = [b - a for a, b in zip(ts, ts[1:])]
+    assert max(gaps) > 0.05                   # silent dwells show up
+
+
+def test_trace_arrivals_replay_and_validation():
+    with pytest.raises(ValueError, match="ascending"):
+        TraceArrivals((2.0, 1.0))
+    tr = TraceArrivals((0.1, 0.5, 0.9, 1.5), start_s=1.0)
+    assert tr.times(horizon_s=1.0) == [1.1, 1.5, 1.9]
+    assert tr.times(n=2) == [1.1, 1.5]
+
+
+# ---------------------------------------------------------------------------
+# fleet_traffic assembly
+# ---------------------------------------------------------------------------
+def _tenants():
+    return [
+        FleetTenant("web", PoissonArrivals(50.0, seed=1),
+                    serving=dict(COSTS), weight=2.0, slo_slowdown=3.0),
+        FleetTenant("batch", PoissonArrivals(30.0, seed=2),
+                    serving=dict(COSTS), priority=-1),
+    ]
+
+
+def test_fleet_traffic_tags_streams_tenants_and_units():
+    g = fleet_traffic(_tenants(), horizon_s=0.2)
+    streams = {n.stream_tag for n in g.nodes}
+    assert {"web/decode", "web/prefill", "batch/decode"} <= streams
+    tenants = {n.tenant_tag for n in g.nodes}
+    assert tenants == {"web", "batch"}
+    uo, up = unit_of_group(g)
+    # one unit per request chain; groups of a unit share its tenant
+    n_req = sum(1 for n in g.nodes if n.name.endswith("prefill-compute"))
+    assert max(uo) + 1 == n_req
+    for g_id, u in enumerate(uo):
+        assert g.nodes[g_id].tenant_tag in ("web", "batch")
+    # unit priority comes from request nodes, not the neutral compute gate
+    web_units = {uo[i] for i, n in enumerate(g.nodes)
+                 if n.tenant_tag == "web"}
+    batch_units = {uo[i] for i, n in enumerate(g.nodes)
+                   if n.tenant_tag == "batch"}
+    assert all(up[u] == 0 for u in web_units)
+    assert all(up[u] == -1 for u in batch_units)
+
+
+def test_fleet_traffic_empty_bounds_raise():
+    with pytest.raises(ValueError, match="no tenant produced arrivals"):
+        fleet_traffic(_tenants(), horizon_s=0.0)
+
+
+def test_fleet_tenant_specs_match_tags():
+    specs = fleet_tenant_specs(_tenants())
+    assert [s.name for s in specs] == ["web", "batch"]
+    assert specs[0].weight == 2.0 and specs[0].slo_slowdown == 3.0
+    assert specs[1].priority == -1
+
+
+# ---------------------------------------------------------------------------
+# AdmissionController policy logic (driven directly, no engine)
+# ---------------------------------------------------------------------------
+def _ctl(n_units, groups_per_unit=1, **kw):
+    unit_of = [u for u in range(n_units) for _ in range(groups_per_unit)]
+    ctl = AdmissionController(unit_of, **kw)
+    ctl.begin(len(unit_of), "unit")
+    return ctl
+
+
+def test_admission_validation():
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        AdmissionController([0], policy="lifo")
+    with pytest.raises(ValueError, match="capacity must be >= 1"):
+        AdmissionController([0], capacity=0)
+    with pytest.raises(ValueError, match="needs unit_priority"):
+        AdmissionController([0], policy="shed-lowest-priority")
+    with pytest.raises(ValueError, match="needs deadline_s"):
+        AdmissionController([0], policy="deadline-aware")
+    with pytest.raises(ValueError, match="covers 1 groups"):
+        AdmissionController([0]).begin(2, "unit")
+    assert ADMISSION_POLICIES == ("reject-newest", "shed-lowest-priority",
+                                  "deadline-aware")
+
+
+def test_reject_newest_sheds_arrivals_past_capacity():
+    ctl = _ctl(4, policy="reject-newest", capacity=2)
+    assert ctl.on_ready(0, 0.0) == ()
+    assert ctl.on_ready(1, 1.0) == ()
+    assert ctl.on_ready(2, 2.0) == (2,)       # full: newest shed
+    ctl.on_finish(0, 3.0)                     # unit 0 leaves
+    assert ctl.on_ready(3, 4.0) == ()         # slot freed
+    assert ctl.n_admitted == 3 and ctl.n_shed == 1
+    assert ctl.shed_units == [2]
+    assert ctl.on_ready(2, 5.0) is None       # already decided
+
+
+def test_shed_lowest_priority_evicts_queued_victim():
+    ctl = _ctl(3, policy="shed-lowest-priority", capacity=1,
+               unit_priority={0: -1, 1: 5, 2: -7})
+    assert ctl.on_ready(0, 0.0) == ()
+    # higher-priority arrival evicts the queued low-priority unit
+    assert ctl.on_ready(1, 1.0) == (0,)
+    # lower-priority arrival against a queued high-priority one: self-shed
+    assert ctl.on_ready(2, 2.0) == (2,)
+    assert ctl.shed_units == [0, 2]
+
+
+def test_shed_lowest_priority_ties_break_to_newest():
+    ctl = _ctl(2, policy="shed-lowest-priority", capacity=1,
+               unit_priority={0: 0, 1: 0})
+    assert ctl.on_ready(0, 0.0) == ()
+    assert ctl.on_ready(1, 1.0) == (1,)       # equal prio -> reject-newest
+
+
+def test_shed_serving_unit_is_never_a_victim():
+    ctl = _ctl(2, policy="shed-lowest-priority", capacity=1,
+               unit_priority={0: -9, 1: 5})
+    assert ctl.on_ready(0, 0.0) == ()
+    ctl.on_serving(0, 0.5)                    # unit 0 now in flight
+    assert ctl.on_ready(1, 1.0) == (1,)       # cannot evict; self-shed
+
+
+def test_deadline_aware_expires_and_drops_at_the_door():
+    ctl = _ctl(5, policy="deadline-aware", capacity=1,
+               deadline_s=1.0, est_service_s=0.6)
+    assert ctl.on_ready(0, 0.0) == ()         # backlog 0: projected 0s
+    assert ctl.on_ready(1, 0.1) == ()         # projected 0.6s <= 1.0s
+    assert ctl.on_ready(2, 0.2) == (2,)       # projected 1.2s > 1.0s
+    ctl.on_serving(0, 0.3)                    # in flight: expiry-proof
+    # queued unit 1 expires (1.1 <= 1.5), freeing room for the arrival
+    assert ctl.on_ready(3, 1.5) == (1,)
+    assert ctl.on_ready(4, 1.6) == (4,)       # backlog too deep again
+    assert ctl.shed_units == [2, 1, 4]
+
+
+def test_multi_group_units_decide_once_and_finish_once():
+    ctl = _ctl(2, groups_per_unit=3, policy="reject-newest", capacity=1)
+    assert ctl.on_ready(0, 0.0) == ()
+    assert ctl.on_ready(3, 0.1) == (3, 4, 5)  # whole unit shed together
+    assert ctl.on_ready(4, 0.2) is None       # unit already decided
+    assert ctl.on_ready(2, 0.3) is None       # same unit as group 0
+    for g in (0, 1):
+        ctl.on_finish(g, 1.0)
+        ctl.on_finish(g, 1.0)                 # idempotent
+    assert ctl._occupancy == 1                # not done yet
+    ctl.on_finish(2, 2.0)
+    assert ctl._occupancy == 0
+
+
+# ---------------------------------------------------------------------------
+# Shed-aware stream stats (the all-dead sentinel)
+# ---------------------------------------------------------------------------
+def test_stream_stats_survive_fully_shed_streams():
+    from repro.traffic.engine import simulate_traffic
+
+    g = fleet_traffic(_tenants(), horizon_s=0.2)
+    uo, _ = unit_of_group(g)
+    # capacity 1 + an absurd deadline policy: shed everything after the
+    # first unit -> some streams may lose every group.
+    ctl = AdmissionController(uo, policy="reject-newest", capacity=1)
+    res, _ = simulate_traffic(TOPO, g, admission=ctl,
+                              check_invariants=True)
+    assert res.shed_groups
+    stats = res.stream_stats()
+    for tag, st in stats.items():
+        assert st.n_live >= 0                 # sentinel armed (dead exist)
+        assert not math.isnan(st.latency_mean)
+        assert not math.isnan(st.latency_p99)
+        assert st.finish >= 0.0
+        if st.n_live == 0:
+            assert st.latency_mean == 0.0 and st.latency_max == 0.0
+    # an admission-free run keeps the -1 "no dead groups" sentinel
+    res2, _ = simulate_traffic(TOPO, g)
+    assert all(st.n_live == -1 for st in res2.stream_stats().values())
+
+
+def test_simulate_validates_admission_arguments():
+    from repro.core.simulator import simulate
+
+    ctl = AdmissionController([0])
+    with pytest.raises(ValueError, match="admission requires deps"):
+        simulate(TOPO, [], admission=ctl)
+
+
+# ---------------------------------------------------------------------------
+# SloDebtArbiter: the debted integrator
+# ---------------------------------------------------------------------------
+def _debt_arb(**kw):
+    specs = [TenantSpec("a", slo_slowdown=2.0), TenantSpec("b")]
+    return SloDebtArbiter(specs, isolated_latency={"a": 1.0}, **kw)
+
+
+def test_slo_debt_validation():
+    with pytest.raises(ValueError, match="horizon_s"):
+        _debt_arb(horizon_s=0.0)
+    with pytest.raises(ValueError, match="gain"):
+        _debt_arb(gain=-1.0)
+    with pytest.raises(ValueError, match="alpha"):
+        _debt_arb(alpha=0.0)
+    with pytest.raises(ValueError, match="deadband"):
+        _debt_arb(deadband=-0.1)
+    assert _debt_arb().policy == "weighted-fair"
+
+
+def test_slo_debt_boost_integrates_and_decays():
+    arb = _debt_arb(horizon_s=10.0, gain=1.0, alpha=1.0, deadband=0.0)
+    arb.on_enqueued(0, "a", 1.0)
+    assert arb.boost("a") == 1.0              # no violations yet
+    arb.on_group_finish(0, "a", 5.0)          # slowdown 5 > slo 2: debt 3
+    assert arb.debt("a") == pytest.approx(3.0)
+    assert arb.boost("a") == pytest.approx(4.0)       # 1 + gain*debt
+    assert arb.effective_weight("a") == pytest.approx(4.0)
+    # horizon passes: the observation ages out and the boost releases
+    arb.on_enqueued(0, "a", 20.0)
+    assert arb.debt("a") == 0.0
+    assert arb.boost("a") == pytest.approx(1.0)
+    # tenant without an SLO never boosts
+    arb.on_group_finish(1, "b", 100.0)
+    assert arb.boost("b") == 1.0
+
+
+def test_slo_debt_damping_and_deadband():
+    arb = _debt_arb(horizon_s=100.0, gain=1.0, alpha=0.5, deadband=0.0)
+    arb.on_enqueued(0, "a", 1.0)
+    arb.on_group_finish(0, "a", 4.0)          # target 3, EMA half-steps
+    assert arb.boost("a") == pytest.approx(2.0)
+    arb.on_enqueued(0, "a", 1.1)
+    assert arb.boost("a") == pytest.approx(2.5)
+    # a wide deadband freezes small updates (hysteresis)
+    frozen = _debt_arb(horizon_s=100.0, alpha=0.3, deadband=0.9)
+    frozen.on_enqueued(0, "a", 1.0)
+    frozen.on_group_finish(0, "a", 2.2)       # tiny debt: update < deadband
+    assert frozen.boost("a") == 1.0
+
+
+def test_slo_debt_max_boost_clamp_and_state():
+    arb = _debt_arb(horizon_s=100.0, gain=10.0, max_boost=3.0, alpha=1.0,
+                    deadband=0.0)
+    arb.on_enqueued(0, "a", 1.0)
+    arb.on_group_finish(0, "a", 50.0)
+    assert arb.boost("a") == pytest.approx(3.0)
+    state = arb.discipline_state()
+    assert state["policy"] == "weighted-fair"  # verify consumers unbroken
+    assert state["discipline"] == "slo-debt"
+    assert state["boosts"]["a"] == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------------
+# calibrate_admission (observe -> actuate)
+# ---------------------------------------------------------------------------
+def test_calibrate_admission_from_traced_run():
+    from repro.obs import BwTimeline, Tracer
+    from repro.traffic.engine import simulate_traffic
+
+    g = fleet_traffic(_tenants(), horizon_s=0.2)
+    trc = Tracer()
+    res, _ = simulate_traffic(TOPO, g, tracer=trc)
+    tl = BwTimeline.from_tracer(trc)
+    n_req = sum(1 for n in g.nodes if n.name.endswith("prefill-compute"))
+    out = calibrate_admission(tl, window_s=res.makespan / 8,
+                              n_requests=n_req,
+                              target_depth=2.0, chunks_per_unit=64.0 * 5)
+    assert out["capacity"] >= 1
+    assert out["est_service_s"] == pytest.approx(tl.makespan / n_req)
+    assert out["peak_depth"] > 0
+    assert 0 < out["busiest_dim_share"] <= 1.0 + 1e-9
+    with pytest.raises(ValueError, match="n_requests"):
+        calibrate_admission(tl, window_s=1.0, n_requests=0)
+    with pytest.raises(ValueError, match="chunks_per_unit"):
+        calibrate_admission(tl, window_s=1.0, n_requests=1,
+                            chunks_per_unit=0.0)
+    ctl = AdmissionController(
+        [0] * len(g.nodes), capacity=int(out["capacity"]))
+    assert ctl.capacity == out["capacity"]

@@ -31,6 +31,13 @@ engine code:
     path must stay byte-for-byte identical to pre-fault engines, so fault
     hooks may never run — or even be evaluated in an ``if``-test — at an
     unguarded level.
+  * **unguarded admission calls** — same contract for the serving-fleet
+    admission controller: any call on an admission-ish name
+    (``admission`` or ``adm*``: the controller handle and the engines'
+    admission closures) must sit behind an ``if``/conditional whose test
+    mentions an admission-ish name (the ``if adm is not None`` pattern).
+    The no-admission path is the production default; shedding logic may
+    cost it nothing but the guard branch.
 
 A line ending in a ``# lint: allow`` comment is exempt (used where the
 construct is deliberate and documented, e.g. the exact-compare in the SMT
@@ -86,6 +93,10 @@ def _is_faultish(name: str) -> bool:
     return name == "faults" or name.startswith("flt")
 
 
+def _is_admissionish(name: str) -> bool:
+    return name == "admission" or name.startswith("adm")
+
+
 def _call_base(node: ast.expr, pred) -> str | None:
     """The matching base name of a call target, if any: ``trc_enq(...)``,
     ``trc.service_start(...)``, ``tracer.enq_dims.append(...)`` -> name."""
@@ -120,20 +131,22 @@ def lint_file(path: Path) -> list[str]:
             out.append(f"{rel}:{node.lineno}: {msg}")
 
     def check_guards(node: ast.AST, trc_guarded: bool,
-                     flt_guarded: bool) -> None:
-        """Reject tracer-hook / fault-machinery calls outside a matching
-        conditional branch (see module docstring: the
+                     flt_guarded: bool, adm_guarded: bool) -> None:
+        """Reject tracer-hook / fault-machinery / admission calls outside
+        a matching conditional branch (see module docstring: the
         zero-overhead-when-disabled contract, held separately per
         subsystem)."""
         if isinstance(node, (ast.If, ast.IfExp)):
             inner_trc = trc_guarded or _test_mentions(node.test, _is_tracerish)
             inner_flt = flt_guarded or _test_mentions(node.test, _is_faultish)
-            check_guards(node.test, trc_guarded, flt_guarded)
+            inner_adm = adm_guarded or _test_mentions(node.test,
+                                                      _is_admissionish)
+            check_guards(node.test, trc_guarded, flt_guarded, adm_guarded)
             body = node.body if isinstance(node.body, list) else [node.body]
             orelse = (node.orelse if isinstance(node.orelse, list)
                       else [node.orelse] if node.orelse is not None else [])
             for child in body + orelse:
-                check_guards(child, inner_trc, inner_flt)
+                check_guards(child, inner_trc, inner_flt, inner_adm)
             return
         if isinstance(node, ast.Call):
             base = _call_base(node.func, _is_tracerish)
@@ -146,10 +159,15 @@ def lint_file(path: Path) -> list[str]:
                 report(node, f"unguarded fault-machinery call on {base!r} "
                        "(fault hooks must sit behind an "
                        "'if <faults> is not None' branch)")
+            base = _call_base(node.func, _is_admissionish)
+            if base is not None and not adm_guarded:
+                report(node, f"unguarded admission call on {base!r} "
+                       "(admission hooks must sit behind an "
+                       "'if <admission> is not None' branch)")
         for child in ast.iter_child_nodes(node):
-            check_guards(child, trc_guarded, flt_guarded)
+            check_guards(child, trc_guarded, flt_guarded, adm_guarded)
 
-    check_guards(tree, False, False)
+    check_guards(tree, False, False, False)
 
     for node in ast.walk(tree):
         if isinstance(node, ast.Compare):
