@@ -20,7 +20,13 @@ Four parts, all emitted into ``BENCH_traffic.json``:
     family (multi-iteration training + a decode tenant) grown to ~1M
     stage-ops; a log-log fit of indexed-engine wall time vs stage-ops must
     stay <= 1.2 (quick mode backstops at 1.6 — its small points are too
-    noisy on shared runners, matching ``sched_perf``'s convention).
+    noisy on shared runners, matching ``sched_perf``'s convention).  Each
+    size also runs ``engine="compiled"`` — dependency gating is on the
+    cohort engine's fast path — asserting bit-identity and recording the
+    compiled wall time, throughput, and fitted exponent alongside
+    (headline compiled-vs-indexed gates live in ``sched_perf``'s
+    dep-free compiled tier; here the dep-resolution heap keeps the
+    speedup modest, so it is recorded, not gated).
 
 Run standalone (``python -m benchmarks.traffic_study [--quick]``) or via
 ``python -m benchmarks.run traffic``.
@@ -258,6 +264,7 @@ def long_stream(costs, quick: bool) -> dict:
     topo = make_tpu_pod_topology(2, 8, 8)
     caches = BatchCaches()
     pts = []
+    cpts = []
     detail = []
     for iterations, gen_tokens in sizes:
         graph, _ = _mixed_graph(costs, iterations=iterations,
@@ -270,10 +277,27 @@ def long_stream(costs, quick: bool) -> dict:
         res, secs = timed_best(
             simulate, topo, groups, task_arrays=ta, engine="indexed",
             repeat=repeat, **kw)
+        # compiled leg: one untimed warmup (populates the per-TaskArrays
+        # caches + fingerprint validation) doubling as the identity check
+        res_c = simulate(topo, groups, task_arrays=ta, engine="compiled",
+                         **kw)
+        bad = res.diff_fields(res_c)
+        if bad:
+            raise AssertionError(
+                f"long-stream: compiled fields {bad} differ from indexed "
+                f"at {ta.n_tasks} stage-ops")
+        res_c = None
+        _, secs_c = timed_best(
+            simulate, topo, groups, task_arrays=ta, engine="compiled",
+            repeat=max(repeat, 2), **kw)
         assert ta.n_tasks == _stage_ops(groups)
         pts.append((ta.n_tasks, secs))
+        cpts.append((ta.n_tasks, secs_c))
         detail.append({"iterations": iterations, "gen_tokens": gen_tokens,
                        "stage_ops": ta.n_tasks, "indexed_s": secs,
+                       "compiled_s": secs_c,
+                       "compiled_stage_ops_per_sec": ta.n_tasks / secs_c,
+                       "compiled_bit_equivalent": True,
                        "makespan_s": res.makespan})
     exp = _fit_exponent(pts)
     limit = 1.6 if quick else 1.2
@@ -282,6 +306,8 @@ def long_stream(costs, quick: bool) -> dict:
         raise AssertionError(
             f"long-stream scaling exponent {exp:.3f} > {limit}")
     return {"points": detail, "exponent": exp, "limit": limit, "ok": ok,
+            "compiled_exponent": _fit_exponent(cpts),
+            "compiled_speedup_largest": pts[-1][1] / cpts[-1][1],
             "largest_stage_ops": pts[-1][0]}
 
 
@@ -319,6 +345,11 @@ def run(quick: bool = False):
         "traffic/long_stream", ls["points"][-1]["indexed_s"] * 1e6,
         f"exponent={ls['exponent']:.3f} "
         f"largest={ls['largest_stage_ops']} stage-ops"))
+    rows.append(row(
+        "traffic/long_stream/compiled",
+        ls["points"][-1]["compiled_s"] * 1e6,
+        f"exponent={ls['compiled_exponent']:.3f} "
+        f"speedup={ls['compiled_speedup_largest']:.2f}x bit-identical"))
 
     OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
     rows.append(row("traffic/json", 0.0, f"json={OUT_JSON.name}"))

@@ -26,11 +26,15 @@ pure function of a subset of the scenario fields:
     across *topologies* with the same per-dim NPU counts and step delays,
     so a bandwidth-split search re-evaluates no stage math at all.
 
-The event loop itself stays per-scenario and is the unmodified indexed
-engine, so every result is bit-identical to a standalone
+The event loop itself stays per-scenario and defaults to the unmodified
+indexed engine, so every result is bit-identical to a standalone
 ``simulate_requests(..., engine="indexed")`` call — the equivalence suite
 (``tests/test_engine_equiv.py``) and ``benchmarks/topo_search.py`` assert
-this field-for-field.
+this field-for-field.  ``Scenario.engine="compiled"`` swaps in the
+cohort-vectorized fast path (``repro.core.engine_compiled``) per scenario;
+its numpy path is bit-identical too, so batches mixing engines still
+agree field-for-field, and scenarios the fast path cannot serve (tracer,
+arbiter, faults) fall back to indexed with the documented signal.
 
 Dependency-gated streams (``Scenario.traffic``, a
 ``repro.traffic.TrafficGraph``) ride the same machinery: the scheduling
@@ -91,6 +95,12 @@ class Scenario:
     :meth:`schedule_key` — the fault-free chunk schedules are what
     re-planning degrades from, so scenarios differing only in faults
     still share one scheduling pass and one task-array build.
+
+    ``engine`` selects the event loop (``"indexed"`` default,
+    ``"compiled"`` for the cohort-vectorized fast path, ``"reference"``
+    for the oracle).  Like faults it is NOT part of :meth:`schedule_key`:
+    engines share schedules and task arrays, which is exactly what makes
+    a compiled-vs-indexed differential sweep cheap.
     """
 
     topology: Topology
@@ -110,6 +120,7 @@ class Scenario:
     tracer_factory: Callable[[], Any] | None = None
     faults: Any | None = None    # repro.faults.FaultSchedule
     replan: bool = False
+    engine: str = "indexed"
 
     def __post_init__(self):
         object.__setattr__(self, "requests", tuple(self.requests))
@@ -390,7 +401,7 @@ def _run_scenario(sc: Scenario, groups: list[list[Chunk]],
         intra=sc.intra, fusion=sc.fusion, fusion_limit=sc.fusion_limit,
         jitter=sc.jitter, seed=sc.seed,
         arbiter=arb, preempt_penalty_s=sc.preempt_penalty_s,
-        engine="indexed", task_arrays=ta, tracer=trc,
+        engine=sc.engine, task_arrays=ta, tracer=trc,
         faults=sc.faults, replanner=replanner, **kw)
 
 
@@ -401,9 +412,9 @@ def simulate_batch(
 ) -> list[SimResult]:
     """Run N independent scenarios with shared precomputation.
 
-    Results are bit-identical to running each scenario standalone with
-    ``engine="indexed"`` (:func:`simulate_scenario`); only the amortized
-    work differs.  Pass a :class:`BatchCaches` to keep schedules, task
+    Results are bit-identical to running each scenario standalone
+    (:func:`simulate_scenario`, which honors ``Scenario.engine`` the same
+    way); only the amortized work differs.  Pass a :class:`BatchCaches` to keep schedules, task
     arrays and stage vectors warm across successive batches (the topology
     search reuses one across rounds).
     """

@@ -80,7 +80,9 @@ def simulate_fabric(
     to the single-job ``intra`` discipline, i.e. tenants share dims but no
     policy arbitrates between them.  Its ``preempt_penalty_s`` sets the
     re-arm latency preempted chunks pay before requeueing.  ``engine``
-    selects the simulator engine (see :func:`repro.core.simulator.simulate`).
+    selects the simulator engine (see :func:`repro.core.simulator.simulate`);
+    ``"compiled"`` is bit-identical on arbiter-free streams and falls back
+    to indexed (documented signal) when an arbiter or tracer is armed.
     ``tracer`` arms the flight recorder (:class:`repro.obs.Tracer`) on the
     joint simulation — tenant lanes in the exported trace come from the
     request tags.  ``faults`` (a :class:`repro.faults.FaultSchedule`)

@@ -118,6 +118,11 @@ def simulate_traffic(
     Multi-tenant graphs run under ``arbiter`` exactly like request streams
     (the per-dim inter-tenant disciplines and preemption are downstream of
     release, so they compose with dependency gating unchanged).
+
+    ``engine="compiled"`` runs the cohort-vectorized fast path; dependency
+    gating is on its supported surface, so dep-heavy serving graphs get
+    the speedup bit-identically (arbiter/tracer/faults/admission scenarios
+    fall back to indexed with the documented signal).
     """
     if replan and faults is None:
         raise ValueError("replan=True requires faults")

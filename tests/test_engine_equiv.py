@@ -1002,3 +1002,137 @@ def test_admission_composes_with_faults_across_engines():
     assert res.shed_groups and sum(res.group_retries) > 0
     shed = {g for g, _ in res.shed_groups}
     assert shed.isdisjoint({g for g, _ in res.failed_groups})
+
+
+# ---------------------------------------------------------------------------
+# Compiled (cohort-vectorized) engine: bit-identity, fallback, jit kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICIES)
+def test_compiled_agrees_across_policies_and_topologies(policy):
+    """Numpy-cohort path vs indexed: bit-identical on randomized online
+    streams across every policy and a spread of fabric shapes."""
+    rng = random.Random(7000 + POLICIES.index(policy))
+    for tname in ("2D-SW_SW", "3D-SW_SW_SW_hetero", "4D-Ring_FC_Ring_SW"):
+        topo = TOPOS[tname]
+        reqs = _rand_requests(rng, 12)
+        for intra in ("SCF", "FIFO"):
+            kw = dict(policy=policy, chunks_per_collective=6, intra=intra)
+            ri, _ = simulate_requests(topo, reqs, engine="indexed", **kw)
+            rc, _ = simulate_requests(topo, reqs, engine="compiled", **kw)
+            assert_same(ri, rc)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_compiled_agrees_with_jitter_seeds(seed):
+    """Jitter + DCN-straggler draws come off the same RNG points, so even
+    stochastic runs stay bit-identical per seed."""
+    from repro.topology import make_tpu_pod_topology
+
+    topo = make_tpu_pod_topology(2, 4, 4, dcn_straggler_sigma=0.4)
+    rng = random.Random(7100 + seed)
+    reqs = _rand_requests(rng, 10)
+    for intra in ("SCF", "FIFO"):
+        kw = dict(chunks_per_collective=6, intra=intra)
+        ri, _ = simulate_requests(topo, reqs, engine="indexed", **kw)
+        rc, _ = simulate_requests(topo, reqs, engine="compiled", **kw)
+        assert_same(ri, rc)
+        a = simulate(topo, [schedule_collective(topo, "AR", 8 * MB, 8,
+                                                "themis")],
+                     jitter=0.07, seed=seed, intra=intra, engine="indexed")
+        b = simulate(topo, [schedule_collective(topo, "AR", 8 * MB, 8,
+                                                "themis")],
+                     jitter=0.07, seed=seed, intra=intra, engine="compiled")
+        assert_same(a, b)
+
+
+def test_compiled_agrees_on_dependency_dags():
+    """Dependency gating is on the compiled fast path (not a fallback):
+    random DAGs must match the indexed engine field-for-field."""
+    from repro.traffic import simulate_traffic
+
+    rng = random.Random(7200)
+    for tname in ("2D-SW_SW", "3D-SW_SW_SW_hetero"):
+        topo = TOPOS[tname]
+        graph = _rand_graph(rng, 14)
+        for intra in ("SCF", "FIFO"):
+            kw = dict(chunks_per_collective=6, intra=intra)
+            ri, gi = simulate_traffic(topo, graph, engine="indexed", **kw)
+            rc, gc = simulate_traffic(topo, graph, engine="compiled", **kw)
+            assert_same(ri, rc)
+            assert [[c.schedule for c in g] for g in gi] == [
+                [c.schedule for c in g] for g in gc]
+
+
+def test_simulate_batch_compiled_matches_standalone():
+    """Scenario.engine="compiled" rides the shared-cache batch machinery
+    and still matches both the standalone call and the indexed engine."""
+    rng = random.Random(7300)
+    reqs = tuple(_rand_requests(rng, 10))
+    topo = TOPOS["3D-SW_SW_SW_hetero"]
+    scs = [Scenario(topology=topo, requests=reqs, seed=s, jitter=0.05,
+                    engine=eng)
+           for s in (0, 1) for eng in ("compiled", "indexed")]
+    batch = simulate_batch(scs, caches=BatchCaches())
+    for sc, res in zip(scs, batch):
+        assert_same(res, simulate_scenario(sc))
+    # same seed, different engine -> identical fields
+    assert_same(batch[0], batch[1])
+    assert_same(batch[2], batch[3])
+
+
+def test_compiled_fallback_signal_is_deterministic_and_warning_free():
+    """Features off the fast path fall back to indexed: bit-identical
+    result, no warning, and exactly one documented signal."""
+    import warnings
+
+    from repro.core import engine_compiled as ec
+
+    topo = TOPOS["2D-SW_SW"]
+    groups = [schedule_collective(topo, "AR", 10 * MB, 6, "themis")]
+    ec.reset_fallbacks()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ri = simulate(topo, groups, engine="indexed", check_invariants=True)
+        rc = simulate(topo, groups, engine="compiled", check_invariants=True)
+    assert_same(ri, rc)
+    assert ec.LAST_FALLBACK == "check_invariants"
+    assert ec.FALLBACK_COUNTS == {"check_invariants": 1}
+    # an eligible run leaves the signal untouched
+    ec.reset_fallbacks()
+    simulate(topo, groups, engine="compiled")
+    assert ec.LAST_FALLBACK is None and ec.FALLBACK_COUNTS == {}
+    # blocker precedence is documented check order
+    assert ec.fast_path_blocker(tracer=object(),
+                                check_invariants=True) == "tracer"
+
+
+def test_unknown_engine_error_lists_valid_engines():
+    topo = TOPOS["2D-SW_SW"]
+    with pytest.raises(ValueError) as ei:
+        simulate(topo, [], engine="turbo")
+    for name in ("indexed", "compiled", "reference"):
+        assert name in str(ei.value)
+
+
+def test_wave_kernel_matches_compiled_within_tolerance():
+    """The jax.jit wave kernel is numeric, not bit-exact: on a wave-
+    shaped stream its done times must agree with the compiled engine
+    within JIT_RTOL."""
+    from repro.core import engine_compiled as ec
+
+    if not ec.jit_available():
+        pytest.skip("jax not importable")
+    # Wave-shaped stream: baseline RS visits each dim exactly once in one
+    # fixed order, so every rank maps to a distinct dim and the kernel's
+    # rank barriers are exact (the engine is then the oracle up to the
+    # kernel's float32 accumulation).
+    topo = TOPOS["3D-SW_SW_SW_hetero"]
+    groups = [[c] for c in
+              schedule_collective(topo, "RS", 24 * MB, 12, "baseline")]
+    issue = [0.0] * len(groups)
+    res = simulate(topo, groups, engine="compiled", issue_times=issue,
+                   fusion=False)
+    done = ec.wave_done_times(*ec.wave_arrays(topo, groups, issue))
+    assert done.shape == (len(groups),)
+    for g, t in enumerate(res.group_finish):
+        assert done[g] == pytest.approx(t, rel=ec.JIT_RTOL)

@@ -152,3 +152,64 @@ def test_fault_and_tracer_guards_are_independent(tmp_path):
            "    if flt is not None and trc is not None:\n"
            "        trc.fault(dim, now, 1.0, 0.0)\n")
     assert _violations(tmp_path, src) == []
+
+
+# -- vector zones (compiled-engine hot sections) -----------------------------
+
+def test_zone_flags_heapq_and_mutation(tmp_path):
+    src = ("import heapq\n"
+           "def f(events, out, xs):\n"
+           "    # lint: vector-zone-begin\n"
+           "    heapq.heappush(events, (0.0, 1))\n"
+           "    heappop(events)\n"
+           "    for x in xs:\n"
+           "        out.append(x)\n"
+           "    # lint: vector-zone-end\n")
+    out = _violations(tmp_path, src)
+    assert len(out) == 3
+    assert sum("heapq call" in v for v in out) == 2
+    assert any(".append()" in v for v in out)
+
+
+def test_zone_rule_is_scoped_to_the_zone(tmp_path):
+    # identical constructs outside the markers are untouched
+    src = ("def f(events, out, xs):\n"
+           "    heappush(events, (0.0, 1))\n"
+           "    for x in xs:\n"
+           "        out.append(x)\n"
+           "    # lint: vector-zone-begin\n"
+           "    y = xs * 2\n"
+           "    # lint: vector-zone-end\n"
+           "    out.extend(y)\n")
+    assert _violations(tmp_path, src) == []
+
+
+def test_zone_honors_lint_allow(tmp_path):
+    src = ("def f(out, xs):\n"
+           "    # lint: vector-zone-begin\n"
+           "    out.extend(xs)  # lint: allow (bounded per-run)\n"
+           "    # lint: vector-zone-end\n")
+    assert _violations(tmp_path, src) == []
+
+
+def test_zone_unbalanced_markers_are_violations(tmp_path):
+    out = _violations(tmp_path, "x = 1\n# lint: vector-zone-begin\ny = 2\n")
+    assert len(out) == 1 and "never closed" in out[0]
+    out = _violations(tmp_path, "x = 1\n# lint: vector-zone-end\n")
+    assert len(out) == 1 and "without a matching begin" in out[0]
+    src = ("# lint: vector-zone-begin\n"
+           "# lint: vector-zone-begin\n"
+           "# lint: vector-zone-end\n")
+    out = _violations(tmp_path, src)
+    assert len(out) == 1 and "nested" in out[0]
+
+
+def test_compiled_engine_zones_exist_and_pass():
+    """The motivating gate: engine_compiled.py declares vector zones and
+    its hot sections stay free of per-event scalar mutation."""
+    eng = REPO / "src" / "repro" / "core" / "engine_compiled.py"
+    src = eng.read_text()
+    assert src.count("lint: vector-zone-begin") >= 3
+    assert src.count("lint: vector-zone-begin") == \
+        src.count("lint: vector-zone-end")
+    assert lint_engine.lint_file(eng) == []

@@ -38,6 +38,19 @@ engine code:
     mentions an admission-ish name (the ``if adm is not None`` pattern).
     The no-admission path is the production default; shedding logic may
     cost it nothing but the guard branch.
+  * **scalar mutation inside vector zones** — sections bracketed by
+    ``# lint: vector-zone-begin`` / ``# lint: vector-zone-end`` (the
+    compiled engine's fused-numpy precompute and bulk-materialization
+    blocks) promise *no per-event Python work*: every heapq call
+    (``heappush``/``heappop``/...) and every mutating container-method
+    call (``.append``/``.extend``/``.insert``/``.pop``/``.remove``/
+    ``.popleft``/``.appendleft``/``.clear``) inside a zone is rejected.
+    That is what keeps the compiled engine's O(n) sections actually
+    vectorized — a stray ``events.append`` in a cohort loop silently
+    degrades 10M-op runs back to interpreter speed.  Bounded per-run
+    accumulations (e.g. per-size-class bookkeeping capped at 64 slots)
+    are deliberate and carry ``# lint: allow``.  Unbalanced zone markers
+    are themselves violations.
 
 A line ending in a ``# lint: allow`` comment is exempt (used where the
 construct is deliberate and documented, e.g. the exact-compare in the SMT
@@ -62,6 +75,38 @@ WALL_CLOCK_ATTRS = {
 }
 WALL_CLOCK_NAMES = (WALL_CLOCK_ATTRS["time"]
                     | WALL_CLOCK_ATTRS["datetime"]) - {"time"}
+
+HEAPQ_FNS = {"heappush", "heappop", "heapify", "heappushpop", "heapreplace",
+             "merge", "nlargest", "nsmallest"}
+MUTATOR_METHODS = {"append", "extend", "insert", "pop", "remove", "clear",
+                   "popleft", "appendleft", "extendleft"}
+
+ZONE_BEGIN = "lint: vector-zone-begin"
+ZONE_END = "lint: vector-zone-end"
+
+
+def _vector_zones(lines: list[str]) -> tuple[list[tuple[int, int]],
+                                             list[tuple[int, str]]]:
+    """1-based (begin, end) line ranges of vector zones, plus marker
+    errors (unmatched begin/end) as (lineno, message) pairs."""
+    zones: list[tuple[int, int]] = []
+    errors: list[tuple[int, str]] = []
+    open_at: int | None = None
+    for i, line in enumerate(lines, start=1):
+        if ZONE_BEGIN in line:
+            if open_at is not None:
+                errors.append((i, "nested vector-zone-begin "
+                               f"(zone opened at line {open_at} not closed)"))
+            open_at = i
+        elif ZONE_END in line:
+            if open_at is None:
+                errors.append((i, "vector-zone-end without a matching begin"))
+            else:
+                zones.append((open_at, i))
+                open_at = None
+    if open_at is not None:
+        errors.append((open_at, "vector-zone-begin never closed"))
+    return zones, errors
 
 
 def _is_floatish(node: ast.expr) -> bool:
@@ -168,6 +213,35 @@ def lint_file(path: Path) -> list[str]:
             check_guards(child, trc_guarded, flt_guarded, adm_guarded)
 
     check_guards(tree, False, False, False)
+
+    zones, zone_errors = _vector_zones(lines)
+    for lineno, msg in zone_errors:
+        out.append(f"{rel}:{lineno}: {msg}")
+
+    def _in_zone(lineno: int) -> bool:
+        return any(b <= lineno <= e for b, e in zones)
+
+    if zones:
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call) and _in_zone(node.lineno)):
+                continue
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in HEAPQ_FNS:
+                report(node, f"heapq call {f.id}() inside a vector zone "
+                       "(fused numpy only; hoist event-queue work out of "
+                       "the zone)")
+            elif isinstance(f, ast.Attribute):
+                if (isinstance(f.value, ast.Name) and f.value.id == "heapq"
+                        and f.attr in HEAPQ_FNS):
+                    report(node, f"heapq call heapq.{f.attr}() inside a "
+                           "vector zone (fused numpy only; hoist event-"
+                           "queue work out of the zone)")
+                elif f.attr in MUTATOR_METHODS:
+                    report(node, f"per-event container mutation .{f.attr}() "
+                           "inside a vector zone (replace with a fused "
+                           "numpy op or a bulk splice, or annotate a "
+                           "bounded per-run accumulation with "
+                           "'# lint: allow')")
 
     for node in ast.walk(tree):
         if isinstance(node, ast.Compare):
